@@ -1,0 +1,55 @@
+"""The paper's motivating use-case, plugged into our GNN substrate: a
+coloring-derived conflict-free scatter schedule.
+
+Coloring the edge-conflict structure (edges conflict iff same dst) yields
+color classes within which every destination appears once — each class is
+a race-free scatter.  We verify (a) the schedule is valid, (b) accumulation
+becomes bitwise deterministic under edge permutation (plain segment-sum
+float accumulation is order-dependent), and (c) measure the overhead."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Csv, suite, time_fn
+from repro.core import coloring as col
+from repro.core.schedule import edge_color_by_dst
+from repro.graphs.csr import CSRGraph, from_edges, to_edge_list
+from repro.models.gnn import colored_segment_sum
+
+
+def main(scale: str = "small") -> None:
+    g = suite(scale)["mesh2d"]
+    e = to_edge_list(g)
+    src, dst = e[:, 0].astype(np.int32), e[:, 1].astype(np.int32)
+    n = g.n_vertices
+    rng = np.random.default_rng(0)
+    msg = rng.standard_normal((len(src), 32)).astype(np.float32)
+
+    ranks, n_colors = edge_color_by_dst(src, dst, n)
+    csv = Csv(["variant", "ms", "n_colors", "deterministic_under_perm",
+               "max_abs_diff_vs_plain"])
+
+    plain = jax.jit(lambda m, d: jax.ops.segment_sum(m, d, n))
+    colored = jax.jit(lambda m, d, c: colored_segment_sum(m, d, n, c,
+                                                          n_colors))
+    t_plain, out_plain = time_fn(
+        lambda: plain(jnp.asarray(msg), jnp.asarray(dst)).block_until_ready(),
+        repeats=5)
+    t_col, out_col = time_fn(
+        lambda: colored(jnp.asarray(msg), jnp.asarray(dst),
+                        jnp.asarray(ranks)).block_until_ready(), repeats=5)
+
+    # determinism under edge permutation
+    perm = rng.permutation(len(src))
+    out_col_p = colored(jnp.asarray(msg[perm]), jnp.asarray(dst[perm]),
+                        jnp.asarray(ranks[perm]))
+    det = bool(np.array_equal(np.asarray(out_col), np.asarray(out_col_p)))
+    diff = float(np.abs(np.asarray(out_col) - np.asarray(out_plain)).max())
+    csv.row("plain_segment_sum", t_plain * 1e3, 1, "n/a", 0.0)
+    csv.row("colored_schedule", t_col * 1e3, n_colors, str(det), diff)
+
+
+if __name__ == "__main__":
+    main()

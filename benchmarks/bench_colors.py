@@ -1,0 +1,25 @@
+"""Color-quality table: every algorithm vs the serial-greedy oracle on all
+six paper graphs (the paper: parallel speed does not cost colors)."""
+from __future__ import annotations
+
+from benchmarks.common import Csv, suite
+from repro.core import coloring as col
+from repro.core.frontier import color_rsoc_compact
+
+
+def main(scale: str = "small") -> None:
+    graphs = suite(scale)
+    csv = Csv(["graph", "max_degree", "serial", "gm", "cat", "rsoc",
+               "rsoc_compact", "jp"])
+    for gname, g in graphs.items():
+        serial = col.n_colors_used(col.greedy_sequential(g))
+        row = [gname, g.max_degree, serial]
+        for algo in ("gm", "cat", "rsoc"):
+            row.append(col.ALGORITHMS[algo](g, seed=1).n_colors)
+        row.append(color_rsoc_compact(g, seed=1).n_colors)
+        row.append(col.color_jp(g, seed=1).n_colors)
+        csv.row(*row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper Figs 3-4 (conflicts) and 5-6 (iterations): CAT vs RSOC as simulated
+parallelism grows.
+
+The paper sweeps OpenMP threads; the lockstep-SPMD analogue of "threads" is
+the chunk width n/n_chunks — vertices colored simultaneously in one wave
+(DESIGN.md §2).  Fewer chunks = wider waves = more parallelism = more
+conflicts; RSOC's in-pass repair keeps both conflicts and rounds below CAT,
+which is the paper's Figs 3-6 claim."""
+from __future__ import annotations
+
+from benchmarks.common import Csv, suite
+from repro.core import coloring as col
+
+
+def main(scale: str = "small") -> None:
+    graphs = suite(scale)
+    csv = Csv(["graph", "algo", "n_chunks", "sim_parallelism", "conflicts",
+               "rounds", "colors"])
+    for gname, g in graphs.items():
+        for n_chunks in (1, 2, 4, 8, 16, 32, 64):
+            for algo in ("cat", "rsoc"):
+                res = col.ALGORITHMS[algo](g, seed=1, n_chunks=n_chunks)
+                csv.row(gname, algo, n_chunks,
+                        max(g.n_vertices // n_chunks, 1),
+                        res.total_conflicts, res.n_rounds, res.n_colors)
+
+
+if __name__ == "__main__":
+    main()

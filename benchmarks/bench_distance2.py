@@ -1,0 +1,28 @@
+"""Paper §6 outlook: distance-2 coloring.  G^2 is much denser than G, and
+the paper predicts RSOC's advantage (fewer conflicts/rounds/passes) grows
+with density — we measure exactly that on the mesh classes."""
+from __future__ import annotations
+
+from benchmarks.common import Csv, suite, time_fn
+from repro.core.distance2 import color_distance_d
+from repro.graphs.csr import power_graph
+
+
+def main(scale: str = "small") -> None:
+    graphs = {k: v for k, v in suite(scale).items()
+              if k in ("mesh2d", "bmw3_2", "pwtk")}
+    csv = Csv(["graph", "d", "avg_degree_gd", "algo", "ms", "rounds",
+               "gather_passes", "conflicts", "colors"])
+    for gname, g in graphs.items():
+        for d in (1, 2):
+            gd = power_graph(g, d)
+            avg_deg = gd.n_edges / gd.n_vertices
+            for algo in ("cat", "rsoc"):
+                sec, (res, _) = time_fn(color_distance_d, g, d=d,
+                                        algorithm=algo, seed=1, repeats=2)
+                csv.row(gname, d, avg_deg, algo, sec * 1e3, res.n_rounds,
+                        res.gather_passes, res.total_conflicts, res.n_colors)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: timing, CSV emission, graph suite cache."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.graphs import generators as gen
+
+
+@functools.lru_cache(maxsize=None)
+def suite(scale: str = "small"):
+    return gen.paper_suite(scale)
+
+
+def time_fn(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
+    """Median wall time of fn(*args) in seconds (jit warmup excluded)."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+class Csv:
+    def __init__(self, header):
+        self.header = list(header)
+        self.rows = []
+        print(",".join(self.header), flush=True)
+
+    def row(self, *vals):
+        vals = [f"{v:.6g}" if isinstance(v, float) else str(v) for v in vals]
+        self.rows.append(vals)
+        print(",".join(vals), flush=True)

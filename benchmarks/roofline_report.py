@@ -1,0 +1,64 @@
+"""Format results/dryrun.jsonl into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+
+def fmt(x, unit=""):
+    if x is None:
+        return "-"
+    for th, suf in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if abs(x) >= th:
+            return f"{x / th:.2f}{suf}{unit}"
+    return f"{x:.3g}{unit}"
+
+
+def load(path):
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return rows
+
+
+def table(rows, mesh="16x16"):
+    out = ["| arch | shape | t_compute | t_memory | t_collective | "
+           "bottleneck | useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), r in sorted(rows.items()):
+        if m != mesh:
+            continue
+        if not r.get("ok"):
+            out.append(f"| {arch} | {shape} | FAIL | | | {r.get('error','')[:60]} | | |")
+            continue
+        rf = r["roofline"]
+        ur = rf.get("useful_ratio")
+        frac = rf.get("roofline_fraction")
+        out.append(
+            f"| {arch} | {shape} | {rf['t_compute_s']:.3e}s | "
+            f"{rf['t_memory_s']:.3e}s | {rf['t_collective_s']:.3e}s | "
+            f"**{rf['bottleneck']}** | "
+            f"{ur:.3f}" .replace("None", "-") + " | "
+            + (f"{frac:.3f}" if frac is not None else "-") + " |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="results/dryrun.jsonl")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load(args.jsonl)
+    print(table(rows, args.mesh))
+    n_ok = sum(1 for r in rows.values() if r.get("ok"))
+    print(f"\n{n_ok}/{len(rows)} runs ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+  table1           paper Table 1 + Figs 1-2 (time, speedup, passes)
+  conflicts        paper Figs 3-4 + 5-6 (conflicts, rounds vs parallelism)
+  colors           color-quality vs serial greedy
+  distance2        paper §6 outlook (G^2 density scaling)
+  colored_scatter  the technique applied to GNN aggregation
+  lm_step          measured smoke-scale LM train-step wall time
+
+Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+SECTIONS = ["table1", "conflicts", "colors", "distance2", "colored_scatter",
+            "lm_step"]
+
+
+def lm_step(scale: str = "small") -> None:
+    """Wall-time of the real jitted train step at smoke scale (sanity that
+    the training path is healthy; full-scale numbers live in §Roofline)."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import Csv, time_fn
+    from repro import configs
+    from repro.data.pipeline import TokenStream
+    from repro.models import transformer as TF
+    from repro.training.optimizer import OptimizerConfig, init_opt_state
+    from repro.training.train_loop import make_train_step
+
+    csv = Csv(["arch", "ms_per_step", "tokens_per_s", "loss0", "loss_end"])
+    for arch in ("qwen3-1.7b", "phi3.5-moe-42b-a6.6b"):
+        cfg = configs.get(arch).make_smoke()
+        params = TF.init_params(jax.random.PRNGKey(0), cfg)
+        stream = TokenStream(batch=8, seq_len=64, vocab=cfg.vocab)
+        step = make_train_step(lambda p, b: TF.train_step_loss(p, cfg, b),
+                               OptimizerConfig(warmup_steps=2,
+                                               total_steps=20), 1,
+                               donate=False)
+        opt = init_opt_state(params)
+        batch = jax.tree.map(jnp.asarray, next(stream))
+        params, opt, m0 = step(params, opt, batch)      # compile + step
+        t0 = time.perf_counter()
+        n = 5
+        for _ in range(n):
+            batch = jax.tree.map(jnp.asarray, next(stream))
+            params, opt, m = step(params, opt, batch)
+        jax.block_until_ready(params)
+        dt = (time.perf_counter() - t0) / n
+        csv.row(arch, dt * 1e3, 8 * 64 / dt, float(m0["loss"]),
+                float(m["loss"]))
+
+
+def main(argv=None) -> None:
+    args = (argv if argv is not None else sys.argv[1:]) or SECTIONS
+    for name in args:
+        print(f"\n===== bench: {name} =====", flush=True)
+        t0 = time.perf_counter()
+        if name == "table1":
+            from benchmarks import bench_table1 as b
+            b.main()
+        elif name == "conflicts":
+            from benchmarks import bench_conflicts as b
+            b.main()
+        elif name == "colors":
+            from benchmarks import bench_colors as b
+            b.main()
+        elif name == "distance2":
+            from benchmarks import bench_distance2 as b
+            b.main()
+        elif name == "colored_scatter":
+            from benchmarks import bench_colored_scatter as b
+            b.main()
+        elif name == "lm_step":
+            lm_step()
+        else:
+            raise SystemExit(f"unknown section {name}; known: {SECTIONS}")
+        print(f"===== {name} done in {time.perf_counter() - t0:.1f}s =====",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

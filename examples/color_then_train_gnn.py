@@ -1,0 +1,67 @@
+"""The paper's technique inside a training pipeline: color a mesh, use the
+coloring as a conflict-free scatter schedule for GNN message passing, and
+train a GatedGCN on the mesh — deterministic aggregation included.
+
+    PYTHONPATH=src python examples/color_then_train_gnn.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import coloring as col
+from repro.data.pipeline import FullGraphStream
+from repro.graphs import generators as gen
+from repro.models import gnn as GNN
+from repro.training.optimizer import (OptimizerConfig, adamw_update,
+                                      init_opt_state)
+
+# 1. the mesh + its coloring (dependency analysis for parallel mesh kernels)
+g = gen.mesh2d(48, 48)
+res = col.color_rsoc(g, seed=0)
+assert col.is_proper(g, res.colors)
+print(f"mesh: {g.n_vertices} vertices; RSOC: {res.n_colors} colors in "
+      f"{res.n_rounds} rounds / {res.gather_passes} passes")
+
+# 2. a GNN on the same mesh, trained full-batch
+cfg = GNN.GatedGCNConfig(n_layers=4, d_hidden=32, d_in=16, d_out=4)
+stream = FullGraphStream(g, d_feat=16, n_classes=4, pad_edges_to=1024)
+params = GNN.gatedgcn_init(jax.random.PRNGKey(0), cfg)
+opt = init_opt_state(params)
+ocfg = OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=60)
+N = g.n_vertices + 1
+
+
+@jax.jit
+def step(params, opt, batch):
+    def loss_fn(p):
+        out = GNN.gatedgcn_apply(p, cfg, batch["feats"], batch["src"],
+                                 batch["dst"], N)
+        return GNN.node_classification_loss(out, batch["labels"],
+                                            batch["train_mask"])
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt, m = adamw_update(ocfg, params, grads, opt)
+    return params, opt, loss
+
+
+for i in range(60):
+    batch = jax.tree.map(jnp.asarray, next(stream))
+    params, opt, loss = step(params, opt, batch)
+    if i % 10 == 0:
+        print(f"step {i:3d}  loss {float(loss):.4f}")
+
+# 3. deterministic aggregation via the coloring-derived edge schedule
+from repro.core.schedule import edge_color_by_dst
+from repro.graphs.csr import to_edge_list
+
+e = to_edge_list(g)
+src, dst = e[:, 0].astype(np.int32), e[:, 1].astype(np.int32)
+ranks, n_colors = edge_color_by_dst(src, dst, g.n_vertices)
+msg = np.random.default_rng(0).standard_normal((len(src), 8)).astype(np.float32)
+out1 = GNN.colored_segment_sum(jnp.asarray(msg), jnp.asarray(dst),
+                               g.n_vertices, jnp.asarray(ranks), n_colors)
+perm = np.random.default_rng(1).permutation(len(src))
+out2 = GNN.colored_segment_sum(jnp.asarray(msg[perm]), jnp.asarray(dst[perm]),
+                               g.n_vertices, jnp.asarray(ranks[perm]),
+                               n_colors)
+print("colored scatter deterministic under edge permutation:",
+      bool(np.array_equal(np.asarray(out1), np.asarray(out2))))

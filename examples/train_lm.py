@@ -1,0 +1,63 @@
+"""End-to-end driver: train a ~100M-param GQA transformer for a few hundred
+steps with the full production substrate (data pipeline -> jitted step with
+grad accumulation -> async checkpointing -> restart support).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--tiny]
+
+--tiny shrinks the model so the example finishes in ~a minute on CPU; the
+default ~100M config is sized for a real accelerator (it runs on CPU too,
+just slowly).
+"""
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import TokenStream
+from repro.models import transformer as TF
+from repro.training.optimizer import OptimizerConfig
+from repro.training import train_loop as TL
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = TF.TransformerConfig(
+            name="lm-tiny", n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+            head_dim=32, d_ff=512, vocab=2048, qk_norm=True, dtype="float32",
+            remat=False, chunk_q=128, chunk_k=128)
+        batch, seq = 8, 128
+    else:
+        # ~100M params: 12L x d512 (GQA 8/4) x ff2048, 32k vocab
+        cfg = TF.TransformerConfig(
+            name="lm-100m", n_layers=12, d_model=512, n_heads=8,
+            n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32768, qk_norm=True,
+            dtype="float32", remat=False, chunk_q=256, chunk_k=256)
+        batch, seq = 16, 256
+    print(f"model {cfg.name}: {cfg.n_params() / 1e6:.1f}M params")
+
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    stream = TokenStream(batch=batch, seq_len=seq, vocab=cfg.vocab)
+    opt_cfg = OptimizerConfig(lr=3e-4, warmup_steps=20,
+                              total_steps=args.steps)
+    loop_cfg = TL.TrainLoopConfig(total_steps=args.steps, microbatches=2,
+                                  ckpt_every=100, ckpt_dir=args.ckpt_dir,
+                                  log_every=10)
+    params, _, hist = TL.run(
+        lambda p, b: TF.train_step_loss(p, cfg, b), params, stream, opt_cfg,
+        loop_cfg, to_device=lambda b: jax.tree.map(jnp.asarray, b),
+        on_metrics=lambda m: print(
+            f"step {m['step']:4d}  loss {m['loss']:.4f}  "
+            f"{m['sec_per_step']:.2f}s/step", flush=True))
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"over {args.steps} steps (checkpoints in {args.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

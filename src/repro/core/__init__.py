@@ -1,0 +1,10 @@
+"""The paper's contribution: optimistic parallel graph coloring (RSOC) and its
+predecessors, adapted for lockstep SPMD (TPU/JAX) execution, single-device and
+multi-device (shard_map halo/replicated exchange).
+"""
+from repro.core.coloring import (  # noqa: F401
+    ALGORITHMS, ColoringResult, color_cat, color_gm, color_jp, color_rsoc,
+    greedy_sequential, is_proper, n_colors_used,
+)
+from repro.core.frontier import color_rsoc_compact  # noqa: F401
+from repro.core.distance2 import color_distance_d  # noqa: F401

@@ -1,0 +1,478 @@
+"""Parallel graph coloring: serial First-Fit, Gebremedhin-Manne (GM),
+Catalyurek et al. (CAT), and the paper's contribution RSOC — adapted for
+lockstep SPMD execution (TPU/JAX).
+
+Vocabulary of the TPU adaptation (DESIGN.md §2):
+
+  * "thread concurrency" -> a *chunk*: the set of vertices (re)colored
+    simultaneously in one data-parallel step.  Within a chunk execution is
+    lockstep; across the ``n_chunks`` chunks of one pass execution is
+    sequential and reads fresh colors — exactly a thread's sequential walk
+    over its partition in the paper.  ``n_chunks`` plays the role of
+    1/threads: chunk width n/n_chunks is the simulated thread count.
+  * Vertices are randomly relabeled once (host-side) so a chunk is a random
+    vertex sample — the paper shuffles RMAT vertex ids for the same reason.
+  * CAT round = phase A: chunked re-color of the defect set U (against colors
+    as of the previous detect, fresh within the pass); BARRIER; phase B:
+    separate detect pass -> new U; BARRIER.  Two neighbor-gather passes,
+    two materialization points per round.
+  * RSOC round = ONE fused detect-and-recolor pass over U: a defect is
+    repaired the moment it is seen, from the same gathered neighbor row
+    ("freshest data", paper §3).  One gather pass, one materialization point.
+    Repairs land a round earlier than CAT's, so rounds and conflicts drop —
+    the paper's Figs. 3-6 mechanism.
+  * Termination under lockstep (paper §5: SIMT livelock): conflicts are broken
+    *asymmetrically* by a hashed random priority — of a conflicting edge only
+    the lower-priority endpoint re-colors.  Every round the highest-priority
+    defective vertex becomes permanently stable => termination in <= |V|
+    rounds (observed 2-8).  This is the deterministic version of the paper's
+    "emulated randomness" remedy for SIMT machines.
+
+Graph encodings: ELL (n, width) padded neighbor table (gather-friendly,
+VMEM-tileable — used by the Pallas kernels too), with a COO side-channel for
+overflow edges of capped-width hubs (power-law graphs).  Overflow forbidden
+sets are built from the round-start snapshot, which preserves the termination
+argument (the stable neighbors' colors are always avoided).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.csr import CSRGraph, FILL, from_edges, to_edge_list, to_ell
+
+MAX_ROUNDS_TRACE = 64  # fixed-size conflict trace (while_loop-friendly)
+
+
+# --------------------------------------------------------------------------
+# result container + verification
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ColoringResult:
+    colors: np.ndarray             # (n,) int32, >= 0, original vertex ids
+    n_rounds: int                  # while-loop rounds (excl. round 0)
+    conflicts_per_round: np.ndarray
+    total_conflicts: int
+    n_colors: int
+    overflow: bool
+    gather_passes: int             # neighbor-gather sweeps executed (perf proxy)
+
+    def summary(self) -> dict:
+        return {"rounds": int(self.n_rounds),
+                "conflicts": int(self.total_conflicts),
+                "colors": int(self.n_colors),
+                "gather_passes": int(self.gather_passes)}
+
+
+def is_proper(g: CSRGraph, colors: np.ndarray) -> bool:
+    colors = np.asarray(colors)
+    e = to_edge_list(g)
+    if len(e) == 0:
+        return bool((colors >= 0).all())
+    return bool((colors >= 0).all() and (colors[e[:, 0]] != colors[e[:, 1]]).all())
+
+
+def n_colors_used(colors) -> int:
+    return int(np.asarray(colors).max()) + 1
+
+
+# --------------------------------------------------------------------------
+# serial oracle (paper Algorithm 1)
+# --------------------------------------------------------------------------
+
+def greedy_sequential(g: CSRGraph) -> np.ndarray:
+    """Sequential First-Fit. Host-side numpy oracle."""
+    colors = np.full(g.n_vertices, -1, dtype=np.int32)
+    scratch = np.zeros(g.max_degree + 2, dtype=np.int64)
+    for v in range(g.n_vertices):
+        nc = colors[g.neighbors(v)]
+        nc = nc[nc >= 0]
+        scratch[nc] = v + 1          # stamp trick: no re-clearing
+        c = 0
+        while scratch[c] == v + 1:
+            c += 1
+        colors[v] = c
+    return colors
+
+
+# --------------------------------------------------------------------------
+# problem prep (host)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ColoringProblem:
+    """Device-ready relabeled graph: ELL + overflow COO + priorities."""
+
+    ell: jnp.ndarray        # (n_pad, W) int32 neighbor ids (relabeled), FILL pad
+    ovf_src: jnp.ndarray    # (m_ovf,) overflow edges (relabeled)
+    ovf_dst: jnp.ndarray
+    pri: jnp.ndarray        # (n_pad,) int32 priority (pad rows = -1)
+    n: int
+    n_pad: int
+    perm: np.ndarray        # old id -> new id
+    C: int                  # color cap (bitmask-friendly, multiple of 32)
+
+
+def _pick_C(g: CSRGraph, C: Optional[int]) -> int:
+    if C is not None:
+        return int(C)
+    c = min(g.max_degree + 2, 128)
+    return int(max(32, -(-c // 32) * 32))
+
+
+def prepare(g: CSRGraph, seed: int = 0, n_chunks: int = 16,
+            ell_cap: int = 512, C: Optional[int] = None,
+            relabel: bool = True) -> ColoringProblem:
+    n = g.n_vertices
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n).astype(np.int64) if relabel else np.arange(n)
+    if relabel:
+        edges = perm[to_edge_list(g).astype(np.int64)]
+        g = from_edges(n, edges, symmetrize=False)
+    n_pad = -(-max(n, n_chunks) // n_chunks) * n_chunks
+    W = max(1, min(g.max_degree, ell_cap))
+    deg = g.degrees
+    if g.max_degree <= ell_cap:
+        ell = to_ell(g, max_degree=W, pad_vertices_to=n_pad)
+        osrc = np.zeros((0,), np.int32)
+        odst = np.zeros((0,), np.int32)
+    else:
+        ell = np.full((n_pad, W), FILL, dtype=np.int32)
+        row = np.repeat(np.arange(n), deg)
+        col = np.arange(g.n_edges) - np.repeat(g.indptr[:-1], deg)
+        in_ell = col < W
+        ell[row[in_ell], col[in_ell]] = g.indices[in_ell]
+        osrc = row[~in_ell].astype(np.int32)
+        odst = g.indices[~in_ell].astype(np.int32)
+    # independent random priorities (asymmetric tie-break)
+    pri = np.full(n_pad, -1, np.int32)
+    pri[:n] = rng.permutation(n).astype(np.int32)
+    return ColoringProblem(
+        ell=jnp.asarray(ell), ovf_src=jnp.asarray(osrc),
+        ovf_dst=jnp.asarray(odst), pri=jnp.asarray(pri),
+        n=n, n_pad=n_pad, perm=perm, C=_pick_C(g, C))
+
+
+def _unpermute(colors_new: np.ndarray, perm: np.ndarray, n: int) -> np.ndarray:
+    """Map colors from relabeled space back to original ids.
+
+    ``perm`` maps old id -> new id, so colors_old[i] = colors_new[perm[i]].
+    """
+    return np.asarray(colors_new)[perm[:n]]
+
+
+# --------------------------------------------------------------------------
+# jittable primitives
+# --------------------------------------------------------------------------
+
+def _forbidden_coo(src, dst, colors, n_rows, C):
+    nbr_c = colors[dst]
+    ok = (nbr_c >= 0) & (nbr_c < C)
+    forb = jnp.zeros((n_rows, C), jnp.uint8)
+    return forb.at[src, jnp.clip(nbr_c, 0, C - 1)].max(ok.astype(jnp.uint8))
+
+
+def _mex(forb):
+    mex = jnp.argmin(forb, axis=-1).astype(jnp.int32)
+    ovf = jnp.all(forb > 0, axis=-1)
+    return mex, ovf
+
+
+def _gather_nbr(ell_k, colors, pri):
+    """Neighbor colors + priorities for a block of ELL rows."""
+    safe = jnp.clip(ell_k, 0, colors.shape[0] - 1)
+    m = ell_k >= 0
+    return jnp.where(m, colors[safe], -1), jnp.where(m, pri[safe], -1)
+
+
+def _forbidden_from_nbrc(nbrc, C):
+    rows = nbrc.shape[0]
+    ok = (nbrc >= 0) & (nbrc < C)
+    forb = jnp.zeros((rows, C), jnp.uint8)
+    r = jnp.arange(rows)[:, None]
+    return forb.at[r, jnp.clip(nbrc, 0, C - 1)].max(ok.astype(jnp.uint8))
+
+
+def _chunked_pass(p_static, ell, osrc, odst, pri, colors, U, force, *,
+                  detect: bool):
+    """One sequential sweep over n_chunks chunks.
+
+    detect=False (CAT phase A): re-color every vertex in U | force.
+    detect=True  (RSOC fused) : re-color a vertex in U only if it is
+                                defective right now (fresh check), or forced.
+    Returns (colors, recolored_mask, n_defects, overflowed).
+    """
+    n, n_pad, C, n_chunks = p_static
+    cs = n_pad // n_chunks
+    valid_row = jnp.arange(n_pad) < n
+    has_ovf = osrc.shape[0] > 0
+    snap_forb = (_forbidden_coo(osrc, odst, colors, n_pad, C)
+                 if has_ovf else None)
+    # overflow-edge conflicts, evaluated once on the pass-start snapshot.
+    # (Conflicts only ever arise between two vertices recolored in the same
+    # earlier pass, so the snapshot view is sufficient for detection; see
+    # module docstring termination argument.)
+    ovf_defect = None
+    if has_ovf and detect:
+        conf = ((colors[osrc] == colors[odst]) & (colors[osrc] >= 0)
+                & (pri[odst] > pri[osrc]))
+        ovf_defect = jnp.zeros((n_pad,), jnp.uint8).at[osrc].max(
+            conf.astype(jnp.uint8)).astype(bool)
+
+    def chunk_body(k, carry):
+        colors, recolored, n_def, ovf = carry
+        lo = k * cs
+        ell_k = jax.lax.dynamic_slice_in_dim(ell, lo, cs, 0)
+        U_k = jax.lax.dynamic_slice_in_dim(U, lo, cs, 0)
+        force_k = jax.lax.dynamic_slice_in_dim(force, lo, cs, 0)
+        valid_k = jax.lax.dynamic_slice_in_dim(valid_row, lo, cs, 0)
+        c_k = jax.lax.dynamic_slice_in_dim(colors, lo, cs, 0)
+        pri_k = jax.lax.dynamic_slice_in_dim(pri, lo, cs, 0)
+        nbrc, nbrp = _gather_nbr(ell_k, colors, pri)          # FRESH colors
+        if detect:
+            defect = ((nbrc == c_k[:, None]) & (c_k[:, None] >= 0)
+                      & (nbrp > pri_k[:, None])).any(axis=1)
+            if ovf_defect is not None:
+                defect = defect | jax.lax.dynamic_slice_in_dim(
+                    ovf_defect, lo, cs, 0)
+            work = valid_k & ((U_k & defect) | force_k)
+            n_def = n_def + (valid_k & U_k & defect).sum(dtype=jnp.int32)
+        else:
+            work = valid_k & (U_k | force_k)
+        forb = _forbidden_from_nbrc(nbrc, C)
+        if has_ovf:
+            sf_k = jax.lax.dynamic_slice_in_dim(snap_forb, lo, cs, 0)
+            forb = jnp.maximum(forb, sf_k)
+        mex, ovf_k = _mex(forb)
+        newc = jnp.where(work, mex, c_k)
+        colors = jax.lax.dynamic_update_slice_in_dim(colors, newc, lo, 0)
+        recolored = jax.lax.dynamic_update_slice_in_dim(recolored, work, lo, 0)
+        return colors, recolored, n_def, ovf | (ovf_k & work).any()
+
+    init = (colors, jnp.zeros((n_pad,), bool), jnp.int32(0), jnp.bool_(False))
+    return jax.lax.fori_loop(0, n_chunks, chunk_body, init)
+
+
+def _detect_pass(p_static, ell, osrc, odst, pri, colors, U):
+    """CAT phase B: standalone defect detection over U (full gather pass)."""
+    n, n_pad, C, n_chunks = p_static
+    valid_row = jnp.arange(n_pad) < n
+    nbrc, nbrp = _gather_nbr(ell, colors, pri)
+    defect = ((nbrc == colors[:, None]) & (colors[:, None] >= 0)
+              & (nbrp > pri[:, None])).any(axis=1)
+    if osrc.shape[0] > 0:
+        conflict = ((colors[osrc] == colors[odst]) & (colors[osrc] >= 0)
+                    & (pri[odst] > pri[osrc]))
+        od = jnp.zeros((n_pad,), jnp.uint8).at[osrc].max(
+            conflict.astype(jnp.uint8))
+        defect = defect | od.astype(bool)
+    return defect & U & valid_row
+
+
+# --------------------------------------------------------------------------
+# algorithm loops
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("p_static", "max_rounds"))
+def _rsoc_loop(ell, osrc, odst, pri, p_static, max_rounds):
+    n, n_pad, C, n_chunks = p_static
+    colors0 = jnp.full((n_pad,), -1, jnp.int32)
+    valid = jnp.arange(n_pad) < n
+    zeros = jnp.zeros((n_pad,), bool)
+
+    # round 0: tentative coloring of the whole graph (chunked, fresh)
+    colors1, U, _, ovf0 = _chunked_pass(
+        p_static, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
+
+    def cond(s):
+        # terminate when a full fused pass detected zero defects: colors were
+        # untouched during that pass, so its detection was complete.
+        colors, U, trace, r, tot, last_def, ovf = s
+        return (last_def > 0) & (r < max_rounds)
+
+    def body(s):
+        colors, U, trace, r, tot, last_def, ovf = s
+        # ONE fused detect-and-recolor pass
+        colors2, recolored, n_def, ovf2 = _chunked_pass(
+            p_static, ell, osrc, odst, pri, colors, U, zeros, detect=True)
+        trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(n_def)
+        return colors2, recolored, trace, r + 1, tot + n_def, n_def, ovf | ovf2
+
+    trace = jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32)
+    state = (colors1, U, trace, jnp.int32(0), jnp.int32(0), jnp.int32(1), ovf0)
+    colors, U, trace, r, tot, _, ovf = jax.lax.while_loop(cond, body, state)
+    return colors[:n], r, trace, tot, ovf
+
+
+@functools.partial(jax.jit, static_argnames=("p_static", "max_rounds"))
+def _cat_loop(ell, osrc, odst, pri, p_static, max_rounds):
+    n, n_pad, C, n_chunks = p_static
+    colors0 = jnp.full((n_pad,), -1, jnp.int32)
+    valid = jnp.arange(n_pad) < n
+    zeros = jnp.zeros((n_pad,), bool)
+
+    # round 0 phase A: color everything (chunked, fresh within pass)
+    colors1, _, _, ovf0 = _chunked_pass(
+        p_static, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
+    # round 0 phase B: detect                                   (pass 2)
+    U1 = _detect_pass(p_static, ell, osrc, odst, pri, colors1, valid)
+
+    def cond(s):
+        return s[1].any() & (s[3] < max_rounds)
+
+    def body(s):
+        colors, U, trace, r, tot, ovf = s
+        n_def = U.sum(dtype=jnp.int32)
+        trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(n_def)
+        # phase A: re-color the defect set                      (pass 1)
+        colors2, _, _, ovf2 = _chunked_pass(
+            p_static, ell, osrc, odst, pri, colors, U, zeros, detect=False)
+        # phase B: separate detect pass                         (pass 2)
+        U2 = _detect_pass(p_static, ell, osrc, odst, pri, colors2, U)
+        return colors2, U2, trace, r + 1, tot + n_def, ovf | ovf2
+
+    trace = jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32)
+    state = (colors1, U1, trace, jnp.int32(0), jnp.int32(0), ovf0)
+    colors, U, trace, r, tot, ovf = jax.lax.while_loop(cond, body, state)
+    return colors[:n], r, trace, tot, ovf
+
+
+@functools.partial(jax.jit, static_argnames=("p_static",))
+def _gm_round0(ell, osrc, odst, pri, p_static):
+    n, n_pad, C, n_chunks = p_static
+    colors0 = jnp.full((n_pad,), -1, jnp.int32)
+    valid = jnp.arange(n_pad) < n
+    zeros = jnp.zeros((n_pad,), bool)
+    colors1, _, _, ovf = _chunked_pass(
+        p_static, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
+    defect = _detect_pass(p_static, ell, osrc, odst, pri, colors1, valid)
+    return colors1, defect, ovf
+
+
+@functools.partial(jax.jit, static_argnames=("n", "C", "max_rounds"))
+def _jp_loop(src, dst, pri, n, C, max_rounds):
+    colors0 = jnp.full((n,), -1, jnp.int32)
+
+    def cond(s):
+        return (s[0] < 0).any() & (s[1] < max_rounds)
+
+    def body(s):
+        colors, r, ovf = s
+        uncolored = colors < 0
+        nbr_pri = jnp.where(uncolored[dst], pri[dst], -1)
+        best = jnp.full((n,), -1, jnp.int32).at[src].max(nbr_pri)
+        elig = uncolored & (pri > best)
+        forb = _forbidden_coo(src, dst, colors, n, C)
+        mex, o = _mex(forb)
+        colors = jnp.where(elig, mex, colors)
+        return colors, r + 1, ovf | (o & elig).any()
+
+    colors, r, ovf = jax.lax.while_loop(
+        cond, body, (colors0, jnp.int32(0), jnp.bool_(False)))
+    return colors, r, ovf
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+
+def _run_with_retry(loop, prob: ColoringProblem, n_chunks: int,
+                    max_rounds: int):
+    C = prob.C
+    while True:
+        p_static = (prob.n, prob.n_pad, C, n_chunks)
+        out = loop(prob.ell, prob.ovf_src, prob.ovf_dst, prob.pri,
+                   p_static, max_rounds)
+        if not bool(out[-1]):
+            return out, C
+        C *= 2  # rare: color cap exceeded -> retry with doubled cap
+
+
+def color_rsoc(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
+               n_chunks: int = 16, max_rounds: int = 1000,
+               ell_cap: int = 512, relabel: bool = True) -> ColoringResult:
+    """RSOC (paper Alg. 3): fused detect-and-recolor, one pass per round."""
+    prob = prepare(g, seed, n_chunks, ell_cap, C, relabel)
+    (colors, r, trace, tot, _), _ = _run_with_retry(
+        _rsoc_loop, prob, n_chunks, max_rounds)
+    colors = _unpermute(colors, prob.perm, prob.n)
+    return ColoringResult(colors=colors, n_rounds=int(r),
+                          conflicts_per_round=np.asarray(trace),
+                          total_conflicts=int(tot),
+                          n_colors=n_colors_used(colors), overflow=False,
+                          gather_passes=1 + int(r))
+
+
+def color_cat(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
+              n_chunks: int = 16, max_rounds: int = 1000,
+              ell_cap: int = 512, relabel: bool = True) -> ColoringResult:
+    """Catalyurek et al. (paper Alg. 2): two-phase rounds."""
+    prob = prepare(g, seed, n_chunks, ell_cap, C, relabel)
+    (colors, r, trace, tot, _), _ = _run_with_retry(
+        _cat_loop, prob, n_chunks, max_rounds)
+    colors = _unpermute(colors, prob.perm, prob.n)
+    return ColoringResult(colors=colors, n_rounds=int(r),
+                          conflicts_per_round=np.asarray(trace),
+                          total_conflicts=int(tot),
+                          n_colors=n_colors_used(colors), overflow=False,
+                          gather_passes=2 * (1 + int(r)))
+
+
+def color_gm(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
+             n_chunks: int = 16, ell_cap: int = 512,
+             relabel: bool = True) -> ColoringResult:
+    """Gebremedhin-Manne: speculate, detect, serial repair."""
+    prob = prepare(g, seed, n_chunks, ell_cap, C, relabel)
+    p_static = (prob.n, prob.n_pad, prob.C, n_chunks)
+    colors, defect, ovf = _gm_round0(prob.ell, prob.ovf_src, prob.ovf_dst,
+                                     prob.pri, p_static)
+    colors_np = np.asarray(colors[:prob.n]).copy()
+    defect_np = np.asarray(defect[:prob.n])
+    # serial repair in the *relabeled* space: rebuild neighbor lists from ELL
+    ell_np = np.asarray(prob.ell)
+    for v in np.nonzero(defect_np)[0]:
+        nb = ell_np[v]
+        nc = colors_np[nb[(nb >= 0) & (nb < prob.n)]]
+        used = set(int(x) for x in nc if x >= 0)
+        c = 0
+        while c in used:
+            c += 1
+        colors_np[v] = c
+    tot = int(defect_np.sum())
+    colors_out = _unpermute(colors_np, prob.perm, prob.n)
+    return ColoringResult(colors=colors_out, n_rounds=1,
+                          conflicts_per_round=np.array([tot]),
+                          total_conflicts=tot,
+                          n_colors=n_colors_used(colors_out), overflow=False,
+                          gather_passes=2)
+
+
+def color_jp(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
+             max_rounds: int = 10000) -> ColoringResult:
+    """Jones-Plassmann priority-MIS baseline (COO formulation)."""
+    n = g.n_vertices
+    Cv = _pick_C(g, C)
+    e = to_edge_list(g)
+    src, dst = jnp.asarray(e[:, 0], jnp.int32), jnp.asarray(e[:, 1], jnp.int32)
+    pri = jnp.asarray(np.random.default_rng(seed).permutation(n).astype(np.int32))
+    while True:
+        colors, r, ovf = _jp_loop(src, dst, pri, n, Cv, max_rounds)
+        if not bool(ovf):
+            break
+        Cv *= 2
+    colors = np.asarray(colors)
+    return ColoringResult(colors=colors, n_rounds=int(r),
+                          conflicts_per_round=np.zeros(1),
+                          total_conflicts=0,
+                          n_colors=n_colors_used(colors), overflow=False,
+                          gather_passes=int(r))
+
+
+ALGORITHMS = {"gm": color_gm, "cat": color_cat, "rsoc": color_rsoc,
+              "jp": color_jp}

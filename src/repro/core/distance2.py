@@ -1,0 +1,25 @@
+"""Distance-d coloring (paper §6 outlook).
+
+The paper argues RSOC's advantage grows with graph density, making it the
+better candidate for d-distance colorings where G^d is much denser than G.
+We validate exactly that: color G^d = power graph of G and compare RSOC vs CAT
+round/pass counts (benchmarks/bench_distance2.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph, power_graph
+from repro.core import coloring as col
+
+
+def color_distance_d(g: CSRGraph, d: int = 2, algorithm: str = "rsoc",
+                     **kwargs) -> tuple[col.ColoringResult, CSRGraph]:
+    gd = power_graph(g, d)
+    fn = col.ALGORITHMS[algorithm]
+    res = fn(gd, **kwargs)
+    return res, gd
+
+
+def is_distance_d_proper(g: CSRGraph, colors: np.ndarray, d: int) -> bool:
+    return col.is_proper(power_graph(g, d), colors)

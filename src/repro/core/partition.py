@@ -1,0 +1,139 @@
+"""Vertex partitioning + halo metadata for distributed coloring.
+
+Baseline distributed scheme replicates the color vector and re-replicates it
+with one ``all_gather`` per round.  The optimized scheme (EXPERIMENTS.md §Perf)
+exchanges only *boundary* colors; this module builds the static metadata both
+need:
+
+  * block partition of [0, n) into D contiguous shards (after a
+    *block-preserving* relabel: vertices are shuffled within their shard so
+    chunks decorrelate, but shard membership — and hence partition locality —
+    is preserved),
+  * per-shard boundary list (my vertices referenced by other shards), padded
+    to the max across shards,
+  * per-shard ghost table (external vertices I reference) with (owner shard,
+    slot in owner's boundary list) coordinates, padded likewise,
+  * an ELL remap: neighbor ids -> local slot [0, n_loc) or ghost slot
+    n_loc + g.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph, FILL, from_edges, to_edge_list
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    n: int
+    n_pad: int               # n rounded up to D * n_loc
+    n_shards: int
+    n_loc: int
+    perm: np.ndarray          # old id -> new id (block-preserving shuffle)
+    graph: CSRGraph           # relabeled graph
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloPlan:
+    boundary: np.ndarray      # (D, max_b) local slots I must publish, FILL pad
+    n_boundary: np.ndarray    # (D,)
+    ghost_owner: np.ndarray   # (D, max_g) owning shard of each ghost, FILL pad
+    ghost_slot: np.ndarray    # (D, max_g) slot in owner's boundary list
+    ell_local: np.ndarray     # (D, n_loc, W) remapped ELL: [0,n_loc) local,
+                              # n_loc+g ghosts, FILL pad
+    max_b: int
+    max_g: int
+
+
+def block_partition(g: CSRGraph, n_shards: int, seed: int = 0) -> Partition:
+    n = g.n_vertices
+    n_loc = -(-n // n_shards)
+    n_pad = n_loc * n_shards
+    rng = np.random.default_rng(seed)
+    # shuffle within each shard's contiguous block only
+    perm = np.arange(n, dtype=np.int64)
+    for d in range(n_shards):
+        lo, hi = d * n_loc, min((d + 1) * n_loc, n)
+        if hi > lo:
+            block = perm[lo:hi].copy()
+            rng.shuffle(block)
+            perm[lo:hi] = block
+    # perm maps old->new within blocks; relabel edges
+    inv = np.empty(n, dtype=np.int64)
+    inv[perm] = np.arange(n)
+    edges = to_edge_list(g).astype(np.int64)
+    edges = perm[edges]
+    g2 = from_edges(n, edges, symmetrize=False)
+    return Partition(n=n, n_pad=n_pad, n_shards=n_shards, n_loc=n_loc,
+                     perm=perm, graph=g2)
+
+
+def build_halo(part: Partition, ell_width: int | None = None) -> HaloPlan:
+    g, D, n_loc, n = part.graph, part.n_shards, part.n_loc, part.n
+    W = ell_width or max(1, g.max_degree)
+    if g.max_degree > W:
+        raise ValueError("halo plan requires ell width >= max degree")
+    shard_of = lambda v: np.minimum(v // n_loc, D - 1)
+
+    boundary_sets = [set() for _ in range(D)]
+    ghost_sets = [set() for _ in range(D)]
+    e = to_edge_list(g).astype(np.int64)
+    s_src, s_dst = shard_of(e[:, 0]), shard_of(e[:, 1])
+    cross = s_src != s_dst
+    for u, v, du, dv in zip(e[cross, 0], e[cross, 1], s_src[cross], s_dst[cross]):
+        ghost_sets[du].add(int(v))     # u references remote v
+        boundary_sets[dv].add(int(v))  # v must be published by its owner
+    boundary_lists = [np.sort(np.fromiter(b, np.int64, len(b))) for b in boundary_sets]
+    ghost_lists = [np.sort(np.fromiter(s, np.int64, len(s))) for s in ghost_sets]
+    max_b = max(1, max(len(b) for b in boundary_lists))
+    max_g = max(1, max(len(s) for s in ghost_lists))
+
+    boundary = np.full((D, max_b), FILL, np.int32)
+    n_boundary = np.zeros((D,), np.int32)
+    ghost_owner = np.full((D, max_g), FILL, np.int32)
+    ghost_slot = np.full((D, max_g), FILL, np.int32)
+    for d in range(D):
+        b = boundary_lists[d]
+        boundary[d, :len(b)] = b - d * n_loc  # local slots
+        n_boundary[d] = len(b)
+    # slot of vertex v in its owner's boundary list
+    slot_of = {}
+    for d in range(D):
+        for i, v in enumerate(boundary_lists[d]):
+            slot_of[int(v)] = i
+    for d in range(D):
+        for i, v in enumerate(ghost_lists[d]):
+            ghost_owner[d, i] = shard_of(v)
+            ghost_slot[d, i] = slot_of[int(v)]
+
+    # remapped ELL per shard
+    ell_local = np.full((D, n_loc, W), FILL, np.int32)
+    deg = g.degrees
+    row = np.repeat(np.arange(n), deg)
+    col = np.arange(g.n_edges) - np.repeat(g.indptr[:-1], deg)
+    dst = g.indices.astype(np.int64)
+    dshard = shard_of(row)
+    nshard = shard_of(dst)
+    local_rows = row - dshard * n_loc
+    # local neighbors -> local slot
+    same = dshard == nshard
+    ell_local[dshard[same], local_rows[same], col[same]] = (dst[same] - nshard[same] * n_loc)
+    # remote neighbors -> n_loc + ghost index (searchsorted in my ghost list)
+    for d in range(D):
+        m = (~same) & (dshard == d)
+        if m.any():
+            gidx = np.searchsorted(ghost_lists[d], dst[m])
+            ell_local[d, local_rows[m], col[m]] = n_loc + gidx
+    return HaloPlan(boundary=boundary, n_boundary=n_boundary,
+                    ghost_owner=ghost_owner, ghost_slot=ghost_slot,
+                    ell_local=ell_local, max_b=max_b, max_g=max_g)
+
+
+def partition_stats(part: Partition) -> dict:
+    e = to_edge_list(part.graph).astype(np.int64)
+    s = np.minimum(e // part.n_loc, part.n_shards - 1)
+    cross = (s[:, 0] != s[:, 1]).mean() if len(e) else 0.0
+    return {"cross_edge_frac": float(cross), "n_shards": part.n_shards,
+            "n_loc": part.n_loc}

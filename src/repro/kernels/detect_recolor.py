@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: RSOC's fused detect-and-recolor over one chunk.
+
+One VMEM round-trip does both the paper's conflict detection and the
+immediate repair — the kernel-level expression of merging Alg. 2's two phases
+into Alg. 3's single phase: neighbor colors are gathered ONCE and feed both
+the defect test (same color as a higher-priority neighbor) and the first-fit
+re-color.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _detect_recolor_kernel(ell_ref, colors_ref, pri_ref, U_ref, rowc_ref,
+                           rowp_ref, newc_ref, rec_ref, ovf_ref,
+                           *, C: int, n: int):
+    ell = ell_ref[...]                        # (BV, W)
+    colors = colors_ref[...]                  # (n,)
+    pri = pri_ref[...]                        # (n,)
+    U = U_ref[...]                            # (BV,)
+    c_r = rowc_ref[...]                       # (BV,) this block's colors
+    p_r = rowp_ref[...]                       # (BV,)
+    BV, W = ell.shape
+
+    def body(j, carry):
+        forb, defect = carry
+        idx = ell[:, j]
+        safe = jnp.clip(idx, 0, n - 1)
+        nc = jnp.where(idx >= 0, colors[safe], -1)
+        np_ = jnp.where(idx >= 0, pri[safe], -1)
+        defect = defect | ((nc == c_r) & (c_r >= 0) & (np_ > p_r))
+        forb = forb | (nc[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1))
+        return forb, defect
+
+    forb, defect = jax.lax.fori_loop(
+        0, W, body,
+        (jnp.zeros((BV, C), jnp.bool_), jnp.zeros((BV,), jnp.bool_)))
+    work = U & defect
+    mex = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
+    newc_ref[...] = jnp.where(work, mex, c_r)
+    rec_ref[...] = work
+    ovf_ref[...] = forb.all(axis=1) & work
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("C", "row_start", "block_rows", "interpret"))
+def detect_recolor(ell, colors, pri, U_rows, row_start: int, C: int = 64,
+                   block_rows: int = 256, interpret: bool = True):
+    """Fused RSOC pass for rows [row_start, row_start + R).
+
+    ell:    (R, W) neighbor tile for those rows
+    colors: (n,) global colors;  pri: (n,) priorities
+    U_rows: (R,) bool, in-frontier mask for those rows
+    Returns (new row colors (R,), recolored (R,), overflow (R,)).
+    """
+    R, W = ell.shape
+    n = colors.shape[0]
+    assert R % block_rows == 0
+    rowc = jax.lax.dynamic_slice_in_dim(colors, row_start, R, 0)
+    rowp = jax.lax.dynamic_slice_in_dim(pri, row_start, R, 0)
+    grid = (R // block_rows,)
+    kernel = functools.partial(_detect_recolor_kernel, C=C, n=n)
+    blk = lambda: pl.BlockSpec((block_rows,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, W), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            blk(), blk(), blk(),
+        ],
+        out_specs=[blk(), blk(), blk()],
+        out_shape=[
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((R,), jnp.bool_),
+            jax.ShapeDtypeStruct((R,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(ell, colors, pri, U_rows, rowc, rowp)

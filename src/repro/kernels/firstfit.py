@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: first-fit tentative coloring over an ELL vertex tile.
+
+The paper's hot loop (gather neighbor colors -> forbidden set -> smallest free
+color).  TPU adaptation (DESIGN.md §2): rectangular (BV, W) ELL tiles in VMEM,
+forbidden sets as a (BV, C) one-hot table built by W vectorized compares on
+the VPU, first-fit = argmin over the color axis (priority encode).  The color
+vector is VMEM-resident per invocation (graphs to ~4M vertices; beyond that
+the ops.py wrapper falls back to the jnp path / page-indirected design notes).
+
+Grid: one program per BV-row block of the chunk being colored.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _firstfit_kernel(ell_ref, colors_ref, out_ref, ovf_ref, *, C: int, n: int):
+    ell = ell_ref[...]                       # (BV, W) int32
+    colors = colors_ref[...]                 # (n,) int32
+    BV, W = ell.shape
+
+    def body(j, forb):
+        idx = ell[:, j]
+        nc = colors[jnp.clip(idx, 0, n - 1)]
+        nc = jnp.where(idx >= 0, nc, -1)
+        return forb | (nc[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1))
+
+    forb = jax.lax.fori_loop(0, W, body, jnp.zeros((BV, C), jnp.bool_))
+    out_ref[...] = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
+    ovf_ref[...] = forb.all(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("C", "block_rows", "interpret"))
+def firstfit(ell, colors, C: int = 64, block_rows: int = 256,
+             interpret: bool = True):
+    """First-fit colors for every ELL row. Returns (mex (R,), overflow (R,))."""
+    R, W = ell.shape
+    n = colors.shape[0]
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    kernel = functools.partial(_firstfit_kernel, C=C, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, W), lambda i: (i, 0)),   # ELL tile
+            pl.BlockSpec((n,), lambda i: (0,)),                # full colors
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((R,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(ell, colors)

@@ -1,0 +1,68 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``backend='auto'`` uses the Pallas kernel on TPU and the jnp oracle path on
+CPU (this container) — the dry-run therefore lowers the pure-jnp
+memory-efficient paths, while kernels are validated in interpret mode by the
+test suite.  ``backend='pallas_interpret'`` forces the kernel body through the
+Pallas interpreter (CPU-executable, bit-faithful to kernel semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.firstfit import firstfit as _firstfit_pallas
+from repro.kernels.detect_recolor import detect_recolor as _dr_pallas
+from repro.kernels.ell_spmm import ell_spmm as _spmm_pallas
+from repro.kernels.flash_attention import flash_attention as _fa_pallas
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _resolve(backend: str) -> str:
+    return default_backend() if backend == "auto" else backend
+
+
+def firstfit(ell, colors, C: int = 64, backend: str = "auto", **kw):
+    b = _resolve(backend)
+    if b == "jnp":
+        return ref.firstfit_ref(ell, colors, C)
+    interp = b == "pallas_interpret"
+    mex, ovf = _firstfit_pallas(ell, colors, C=C, interpret=interp, **kw)
+    return mex, ovf
+
+
+def detect_recolor(ell, colors, pri, U_rows, row_start: int, C: int = 64,
+                   backend: str = "auto", **kw):
+    b = _resolve(backend)
+    if b == "jnp":
+        return ref.detect_recolor_ref(ell, colors, pri, row_start, U_rows, C)
+    interp = b == "pallas_interpret"
+    return _dr_pallas(ell, colors, pri, U_rows, row_start=row_start, C=C,
+                      interpret=interp, **kw)
+
+
+def ell_aggregate(ell, feats, op: str = "sum", backend: str = "auto", **kw):
+    """GNN neighbor aggregation. Falls back to jnp when the feature panel
+    would not fit VMEM (n * block_feats * 4 > ~8MB)."""
+    b = _resolve(backend)
+    n = feats.shape[0]
+    if b == "pallas" and n * 128 * feats.dtype.itemsize > 8 * 2**20:
+        b = "jnp"
+    if b == "jnp":
+        return ref.ell_spmm_ref(ell, feats, op)
+    interp = b == "pallas_interpret"
+    return _spmm_pallas(ell, feats, op=op, interpret=interp, **kw)
+
+
+def attention(q, k, v, *, causal: bool = True, backend: str = "auto", **kw):
+    b = _resolve(backend)
+    if b == "jnp":
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    interp = b == "pallas_interpret"
+    return _fa_pallas(q, k, v, causal=causal, interpret=interp, **kw)

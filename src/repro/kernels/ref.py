@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Each ``<name>_ref`` mirrors the corresponding kernel's contract exactly; the
+kernel tests sweep shapes/dtypes and assert parity in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# first-fit tentative coloring (paper Alg. 1 inner loop, one chunk)
+# --------------------------------------------------------------------------
+
+def firstfit_ref(ell, colors, C: int):
+    """Smallest color not used by any neighbor, per ELL row.
+
+    ell:    (R, W) int32 neighbor ids, FILL(-1) padded
+    colors: (n,)   int32 current colors (-1 uncolored)
+    returns (mex (R,) int32, overflow (R,) bool)
+    """
+    n = colors.shape[0]
+    nbrc = jnp.where(ell >= 0, colors[jnp.clip(ell, 0, n - 1)], -1)
+    forb = (nbrc[:, :, None] == jnp.arange(C)[None, None, :]).any(axis=1)
+    mex = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
+    return mex, forb.all(axis=1)
+
+
+# --------------------------------------------------------------------------
+# fused detect-and-recolor (RSOC, paper Alg. 3 inner loop, one chunk)
+# --------------------------------------------------------------------------
+
+def detect_recolor_ref(ell, colors, pri, row_start: int, U_rows, C: int):
+    """For rows [row_start, row_start+R): if in U and defective (same color as
+    a higher-priority neighbor), re-color with first-fit; else keep.
+
+    returns (new row colors (R,), recolored (R,) bool, overflow (R,) bool)
+    """
+    n = colors.shape[0]
+    R = ell.shape[0]
+    rows = row_start + jnp.arange(R)
+    c_r = colors[rows]
+    p_r = pri[rows]
+    nbrc = jnp.where(ell >= 0, colors[jnp.clip(ell, 0, n - 1)], -1)
+    nbrp = jnp.where(ell >= 0, pri[jnp.clip(ell, 0, n - 1)], -1)
+    defect = ((nbrc == c_r[:, None]) & (c_r[:, None] >= 0)
+              & (nbrp > p_r[:, None])).any(axis=1)
+    work = U_rows & defect
+    forb = (nbrc[:, :, None] == jnp.arange(C)[None, None, :]).any(axis=1)
+    mex = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
+    newc = jnp.where(work, mex, c_r)
+    return newc, work, forb.all(axis=1) & work
+
+
+# --------------------------------------------------------------------------
+# ELL aggregation (GNN message passing over padded neighbor tiles)
+# --------------------------------------------------------------------------
+
+def ell_spmm_ref(ell, feats, op: str = "sum"):
+    """out[v] = op over feats[nbr] for nbr in ell[v], FILL ignored.
+
+    ell:   (R, W) int32
+    feats: (n, d) float
+    op in {sum, mean, max}
+    """
+    n, d = feats.shape
+    valid = (ell >= 0)[..., None]
+    gathered = jnp.where(valid, feats[jnp.clip(ell, 0, n - 1)], 0.0)
+    if op == "sum":
+        return gathered.sum(axis=1)
+    if op == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1), 1)
+        return gathered.sum(axis=1) / cnt
+    if op == "max":
+        neg = jnp.where(valid, feats[jnp.clip(ell, 0, n - 1)], -jnp.inf)
+        out = neg.max(axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(op)
+
+
+# --------------------------------------------------------------------------
+# blockwise (flash) attention
+# --------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Plain softmax attention oracle.
+
+    q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D); GQA: Hq % Hkv == 0.
+    """
+    B, Hq, Lq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kr) * scale
+    if causal:
+        Lk = k.shape[2]
+        # query i attends to keys <= i + (Lk - Lq)  (decode-friendly offset)
+        mask = (jnp.arange(Lk)[None, :] <= jnp.arange(Lq)[:, None] + (Lk - Lq))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)

@@ -1,0 +1,242 @@
+"""Roofline bookkeeping: HLO collective parsing + the three roofline terms.
+
+Conventions (EXPERIMENTS.md §Roofline):
+  * ``cost_analysis()`` of an SPMD-partitioned executable reports the
+    per-device program -> compute/memory terms are per-chip seconds.
+  * collective bytes = sum of operand sizes of every all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute in the
+    post-optimization per-device HLO; divided by the per-chip ICI
+    bandwidth this is a per-chip lower-bound wire time (ring/bidirectional
+    factors are schedule-dependent and documented, not modeled).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*)\[([0-9,]*)\]")
+_GROUPS_COMPACT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_COMPACT_RE.search(line)
+    if m:                                  # [n_groups, group_size]<=[N]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:                                  # {{0,1,2,...},...}
+        return max(len([x for x in m.group(1).split(",") if x]), 1)
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device wire bytes + counts from post-optimization HLO text.
+
+    Post-SPMD HLO prints per-device shapes; operands carry no types, so
+    bytes are derived from the RESULT shape R and the group size G with the
+    standard ring-schedule factors:
+        all-reduce          2 * R * (G-1)/G     (reduce-scatter + all-gather)
+        all-gather          R * (G-1)/G         (R = gathered result)
+        reduce-scatter      R * (G-1)            (operand = R*G)
+        all-to-all          R * (G-1)/G
+        collective-permute  R
+    """
+    factors = {
+        "all-reduce": lambda R, G: 2.0 * R * (G - 1) / G,
+        "all-gather": lambda R, G: R * (G - 1) / G,
+        "reduce-scatter": lambda R, G: float(R) * (G - 1),
+        "all-to-all": lambda R, G: R * (G - 1) / G,
+        "collective-permute": lambda R, G: float(R),
+    }
+    out = {k: {"bytes": 0.0, "count": 0} for k in factors}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group(3) == "-done":   # count start/bare, skip done
+            continue
+        kind = m.group(2)
+        R = sum(_shape_bytes(dt, dims)
+                for dt, dims in _SHAPE_RE.findall(m.group(1)))
+        G = _group_size(line)
+        out[kind]["bytes"] += factors[kind](R, G)
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    coll_bytes_per_device: float
+    n_chips: int
+    model_flops: float = 0.0         # 6*N*D style useful-FLOPs estimate
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        total = self.flops_per_device * self.n_chips
+        return (self.model_flops / total) if (self.model_flops and total) \
+            else None
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """Fraction of the compute roofline achievable at the bound:
+        useful model FLOPs / (chips * peak * bound-time)."""
+        if not self.model_flops or self.t_bound <= 0:
+            return None
+        return self.model_flops / (self.n_chips * PEAK_FLOPS_BF16
+                                   * self.t_bound)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(compiled, n_chips: int, model_flops: float = 0.0) -> dict:
+    """Roofline terms via the trip-count-aware HLO walker (hlo_cost.py).
+
+    ``cost_analysis()`` is recorded as a cross-check but NOT used for the
+    terms: it counts while bodies once, under-costing scanned layers."""
+    from repro.launch import hlo_cost
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):            # some backends return [dict]
+        cost = cost[0]
+    walk = hlo_cost.analyze_text(compiled.as_text())
+    coll = walk["collectives"]
+    roof = Roofline(flops_per_device=float(walk["flops"]),
+                    hbm_bytes_per_device=float(walk["bytes"]),
+                    coll_bytes_per_device=float(coll["total_bytes"]),
+                    n_chips=n_chips, model_flops=model_flops)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+        mem["peak_bytes_per_device"] = (
+            mem.get("argument_size_in_bytes", 0)
+            + mem.get("output_size_in_bytes", 0)
+            + mem.get("temp_size_in_bytes", 0)
+            - mem.get("alias_size_in_bytes", 0))
+    except Exception as e:                # CPU backend may not support it
+        mem["error"] = str(e)
+    xcheck = {"xla_flops": float(cost.get("flops", 0.0)),
+              "xla_bytes": float(cost.get("bytes accessed", 0.0))}
+    return {"roofline": roof.as_dict(), "collectives": coll, "memory": mem,
+            "xla_cost_crosscheck": xcheck}
+
+
+# --------------------------------------------------------------------------
+# useful-FLOPs (MODEL_FLOPS) estimates per cell
+# --------------------------------------------------------------------------
+
+def lm_model_flops(cfg, kind: str, batch: int, seq_len: int) -> float:
+    """Useful FLOPs: 6*N*D (train) / 2*N*D (inference) linear term plus the
+    ideal causal attention term (2*B*L^2*H*Dh per layer fwd, x3 train)."""
+    n_active = cfg.n_active_params()
+    h_dh = cfg.n_heads * cfg.head_dim
+    if kind == "train":
+        attn = 6.0 * cfg.n_layers * batch * seq_len ** 2 * h_dh * 0.5
+        return 6.0 * n_active * batch * seq_len + attn
+    if kind == "prefill":
+        attn = 2.0 * cfg.n_layers * batch * seq_len ** 2 * h_dh * 0.5
+        return 2.0 * n_active * batch * seq_len + attn
+    # decode: one token per request against a seq_len cache
+    attn = 4.0 * cfg.n_layers * batch * seq_len * h_dh
+    return 2.0 * n_active * batch + attn
+
+
+def gnn_model_flops(arch: str, cfg, n_nodes: int, n_edges: int,
+                    train: bool = True) -> float:
+    if arch == "gat-cora":
+        per_l = 2 * n_nodes * cfg.d_in * cfg.n_heads * cfg.d_hidden \
+            + 4 * n_edges * cfg.n_heads * cfg.d_hidden
+        f = cfg.n_layers * per_l
+    elif arch == "meshgraphnet":
+        d = cfg.d_hidden
+        per_l = 2 * n_edges * (3 * d) * d + 2 * n_edges * d * d \
+            + 2 * n_nodes * (2 * d) * d + 2 * n_nodes * d * d
+        f = cfg.n_layers * per_l
+    elif arch == "gatedgcn":
+        d = cfg.d_hidden
+        f = cfg.n_layers * (2 * 3 * n_nodes * d * d + 2 * 2 * n_edges * d * d)
+    else:                                     # nequip
+        C = cfg.channels
+        n_paths = len(cfg.paths)
+        # per edge per path: C * (2l1+1)(2l2+1)(2l3+1) MACs ~ C*27 at l_max=2
+        f = cfg.n_layers * n_edges * n_paths * C * 27 * 2 \
+            + cfg.n_layers * 2 * n_nodes * 2 * C * C * 9
+    return (3.0 if train else 1.0) * f
+
+
+def recsys_model_flops(cfg, kind: str, batch: int,
+                       n_candidates: int = 0) -> float:
+    d = cfg.d_x0
+    cross = cfg.n_cross_layers * 2 * d * d
+    mlp, d_in = 0, d
+    for h in cfg.mlp_dims:
+        mlp += 2 * d_in * h
+        d_in = h
+    per_ex = cross + mlp + cfg.n_sparse * cfg.embed_dim  # + bag gather adds
+    if kind == "retrieval":
+        return per_ex + 2.0 * n_candidates * cfg.mlp_dims[-1]
+    return (3.0 if kind == "train" else 1.0) * batch * per_ex

@@ -1,0 +1,140 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production meshes and extract the roofline terms.
+
+MUST be run as a standalone process (the device-count flag below has to land
+before jax initializes — hence the env assignment before any other import).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out results/dryrun.jsonl
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.configs.common import shapes_for
+from repro.launch import analysis as AN
+from repro.launch import cells as CELLS
+from repro.launch.mesh import make_production_mesh, n_chips
+
+
+def model_flops_for(arch: str, shape: str) -> float:
+    arch_def = configs.get(arch)
+    shp = shapes_for(arch_def.family)[shape]
+    if arch_def.family == "lm":
+        cfg = arch_def.make_full()
+        return AN.lm_model_flops(cfg, shp["kind"], shp["batch"],
+                                 shp["seq_len"])
+    if arch_def.family == "gnn":
+        cfg = arch_def.make_full(d_in=shp["d_feat"],
+                                 n_classes=shp["n_classes"])
+        shapes, n_nodes = CELLS._gnn_batch_shapes(arch_def, shp)
+        n_edges = shapes["src"][0]
+        return AN.gnn_model_flops(arch, cfg, n_nodes, n_edges)
+    cfg = arch_def.make_full()
+    return AN.recsys_model_flops(cfg, shp["kind"], shp["batch"],
+                                 shp.get("n_candidates", 0))
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        out[k] = {"true": True, "false": False}.get(
+            v.lower(), int(v) if v.lstrip("-").isdigit() else v)
+    return out or None
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             verbose: bool = True, overrides=None) -> dict:
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = CELLS.build_cell(arch, shape, mesh, overrides=overrides)
+    lowered = cell.lower(mesh)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+    res = AN.analyze(compiled, n_chips(mesh),
+                     model_flops=model_flops_for(arch, shape))
+    res.update(arch=arch, shape=shape, kind=cell.kind,
+               mesh="2x16x16" if multi_pod else "16x16",
+               t_lower_s=round(t_lower, 2), t_compile_s=round(t_compile, 2),
+               overrides=overrides, ok=True)
+    if verbose:
+        r = res["roofline"]
+        peak = res["memory"].get("peak_bytes_per_device")
+        peak_s = f" peak={peak / 2**30:.1f}GiB" if peak else ""
+        print(f"[OK] {arch:24s} {shape:14s} {res['mesh']:7s} "
+              f"tc={r['t_compute_s']:.3e} tm={r['t_memory_s']:.3e} "
+              f"tx={r['t_collective_s']:.3e} -> {r['bottleneck']:10s}"
+              f"{peak_s} (lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+              flush=True)
+    return res
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=("no", "yes", "both"),
+                    default="no")
+    ap.add_argument("--out", default=None, help="append-mode jsonl")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already present in --out")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="model-config override (perf variants), repeatable")
+    args = ap.parse_args()
+    overrides = _parse_overrides(args.set)
+
+    if args.all:
+        grid = configs.all_cells()
+    else:
+        if not args.arch:
+            raise SystemExit("--arch or --all required")
+        shapes = ([args.shape] if args.shape else
+                  list(shapes_for(configs.get(args.arch).family)))
+        grid = [(args.arch, s) for s in shapes]
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    done = set()
+    if args.out and args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    n_fail = 0
+    for arch, shape in grid:
+        for mp in pods:
+            mesh_name = "2x16x16" if mp else "16x16"
+            if (arch, shape, mesh_name) in done:
+                continue
+            try:
+                res = run_cell(arch, shape, mp, overrides=overrides)
+            except Exception as e:
+                n_fail += 1
+                res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "ok": False, "error": f"{type(e).__name__}: {e}"}
+                print(f"[FAIL] {arch} {shape} {mesh_name}: {e}", flush=True)
+                traceback.print_exc()
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(res) + "\n")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

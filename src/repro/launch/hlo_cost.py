@@ -1,0 +1,433 @@
+"""Trip-count-aware cost model over post-optimization HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of its
+trip count (verified on this jax/XLA build), which under-counts scanned
+layers and chunked-attention loops by orders of magnitude.  XLA's loop
+analysis leaves ``backend_config={"known_trip_count":{"n":"L"}}`` on every
+``while`` op, so an honest per-device cost is recoverable by walking the
+call graph with multipliers.
+
+Model:
+  flops  — 2 * result_elems * prod(lhs contracting dims) per ``dot``
+           (+ convolution treated as dot-equivalent if present), summed over
+           every computation reachable from ENTRY; computations called from
+           a while body are scaled by the loop's known trip count.
+           Elementwise/transcendental flops are ignored (dot-dominated
+           workloads; consistent with roofline practice).
+  bytes  — HBM traffic at the *schedule level*: for every op in a
+           control-reachable computation (ENTRY, while bodies/conds,
+           conditional branches, call targets — NOT fusion interiors),
+           result bytes + resolvable operand bytes.  Tuple plumbing,
+           bitcasts, parameters and constants are free.  Fusion interiors
+           never touch HBM (that is what fusion means); their boundary
+           (operands/results) is what's counted.
+  collectives — same walk, restricted to collective ops, with ring factors
+           (see analysis.parse_collectives) and trip-count multipliers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_OP_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*)\[([0-9,]*)\]")
+
+
+def _parse_op_line(line: str):
+    """-> (name, type_str, opcode, rest) or None.
+
+    Handles tuple result types containing ``/*index=N*/`` comments (which
+    defeat naive regexes) by scanning to the matching paren."""
+    m = _OP_NAME_RE.match(line)
+    if not m:
+        return None
+    i = m.end()
+    if i >= len(line):
+        return None
+    if line[i] == "(":                       # tuple type: match parens
+        depth, j = 1, i + 1
+        while j < len(line) and depth:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+            j += 1
+        type_str = line[i:j]
+    else:                                    # plain `dtype[dims]{layout}`
+        j = i
+        while j < len(line) and not line[j].isspace():
+            j += 1
+        type_str = line[i:j]
+    m2 = _OPCODE_RE.match(line, j)
+    if not m2:
+        return None
+    return m.group(1), type_str, m2.group(1), line[m2.end():]
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\\"=:{ ]+n[\\\":]+(\d+)')
+_CALL_ATTR = re.compile(r"(?:body|condition|branch_computations|to_apply|calls)=")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+               for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # everything after the opening '('
+    is_root: bool = False
+
+    @property
+    def operands(self):
+        return _OPERAND_RE.findall(self.rest.split(")")[0])
+
+
+def parse_hlo(hlo_text: str):
+    """-> (computations: name -> [Op], entry_name)."""
+    comps, entry = {}, None
+    cur, cur_name = None, None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur_name = m.group(1)
+                cur = []
+                comps[cur_name] = cur
+                if line.strip().startswith("ENTRY"):
+                    entry = cur_name
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            cur.append(_Op(*parsed, is_root="ROOT " in line[:12]))
+    return comps, entry
+
+
+def _called_comps(op: _Op):
+    """Names of computations an op calls, tagged by mechanism."""
+    out = []
+    for attr in ("body", "condition", "to_apply", "calls"):
+        m = re.search(attr + r"=%?([\w.\-]+)", op.rest)
+        if m:
+            out.append((attr, m.group(1)))
+    m = re.search(r"branch_computations=\{([^}]*)\}", op.rest)
+    if m:
+        for name in m.group(1).split(","):
+            out.append(("branch", name.strip().lstrip("%")))
+    return out
+
+
+_COLL_FACTORS = {
+    "all-reduce": lambda R, G: 2.0 * R * (G - 1) / G,
+    "all-gather": lambda R, G: R * (G - 1) / G,
+    "reduce-scatter": lambda R, G: float(R) * (G - 1),
+    "all-to-all": lambda R, G: R * (G - 1) / G,
+    "collective-permute": lambda R, G: float(R),
+}
+_FREE_OPS = {"tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+             "after-all", "reshape", "iota", "partition-id", "replica-id"}
+
+# Bare elementwise/broadcast ops at schedule level: the TPU backend fuses
+# these into neighbouring dots/fusions/reduces, so counting their operands
+# as HBM traffic would double-bill nearly every tensor (the CPU backend we
+# compile on fuses less aggressively).  Their traffic is attributed to the
+# *consuming* counted op instead.
+_FUSABLE_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "select", "clamp",
+    "compare", "and", "or", "xor", "not", "convert", "broadcast", "pad",
+    "reverse", "real", "imag", "is-finite", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "popcnt", "map",
+    "rng-bit-generator", "rng", "expm1", "log1p", "atan2", "remainder",
+    "cosine", "sine", "tan", "erf", "exp",
+}
+
+
+def _group_size(rest: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = re.search(r"replica_groups=\{\{([0-9,]*)\}", rest)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x]), 1)
+    return 1
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_hlo(hlo_text)
+        self.types = {}              # (comp, op_name) -> type_str
+        for cname, ops in self.comps.items():
+            for op in ops:
+                self.types[(cname, op.name)] = op.type_str
+        self._flops_memo = {}
+        self._bytes_memo = {}
+        self._coll_memo = {}
+
+    # -- flops ---------------------------------------------------------------
+
+    def _dot_flops(self, cname: str, op: _Op) -> float:
+        result_elems = sum(_shape_elems(d)
+                           for _, d in _SHAPE_RE.findall(op.type_str))
+        ops = _OPERAND_RE.findall(op.rest.split(")")[0])
+        lhs_type = self.types.get((cname, ops[0])) if ops else None
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+        k = 1
+        if lhs_type and m:
+            dims_str = _SHAPE_RE.search(lhs_type)
+            if dims_str:
+                lhs_dims = [int(x) for x in dims_str.group(2).split(",") if x]
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(lhs_dims):
+                        k *= lhs_dims[int(ci)]
+        return 2.0 * result_elems * k
+
+    def comp_flops(self, cname: str) -> float:
+        if cname in self._flops_memo:
+            return self._flops_memo[cname]
+        self._flops_memo[cname] = 0.0     # cycle guard
+        total = 0.0
+        for op in self.comps.get(cname, []):
+            if op.opcode in ("dot", "convolution"):
+                total += self._dot_flops(cname, op)
+            for mech, callee in _called_comps(op):
+                mult = 1.0
+                if op.opcode == "while" and mech == "body":
+                    mult = float(self._trip(op))
+                if op.opcode == "while" and mech == "condition":
+                    mult = float(self._trip(op)) + 1
+                total += mult * self.comp_flops(callee)
+        self._flops_memo[cname] = total
+        return total
+
+    def _trip(self, op: _Op) -> int:
+        m = _TRIP_RE.search(op.rest)
+        return int(m.group(1)) if m else 1
+
+    # -- bytes ----------------------------------------------------------------
+
+    def _producer(self, cname: str, oname: str) -> Optional[_Op]:
+        key = (cname, oname)
+        if not hasattr(self, "_op_index"):
+            self._op_index = {}
+            for cn, ops in self.comps.items():
+                for o in ops:
+                    self._op_index[(cn, o.name)] = o
+        return self._op_index.get(key)
+
+    def _is_transparent_fusion(self, op: _Op) -> bool:
+        """Fusions containing only converts/copies/layout ops.
+
+        XLA-CPU's FloatNormalization wraps every bf16 tensor in
+        convert-to-f32 fusions (no native bf16 on host); on TPU these fuse
+        into their consumers and never touch HBM.  Billing them — or their
+        f32 results as consumer operands — would double-count nearly every
+        activation at 2x width."""
+        if op.opcode != "fusion":
+            return False
+        key = ("transparent", op.name)
+        if key in self._bytes_memo:
+            return self._bytes_memo[key]
+        callee = next((c for m, c in _called_comps(op) if m == "calls"), None)
+        ok = False
+        if callee in self.comps:
+            ok = all(o.opcode in _FREE_OPS or o.opcode in _FUSABLE_OPS
+                     or o.opcode in ("copy", "transpose")
+                     for o in self.comps[callee])
+        self._bytes_memo[key] = ok
+        return ok
+
+    def _operand_bytes(self, cname: str, oname: str, depth: int = 0) -> float:
+        """Read traffic for one operand: 0 for values that never live in
+        HBM (broadcast-of-scalar, iota, constants); transparent
+        convert/copy fusions resolve through to their source operand."""
+        prod = self._producer(cname, oname)
+        if prod is not None and prod.opcode in ("iota", "constant"):
+            return 0.0
+        if prod is not None and prod.opcode == "broadcast":
+            ops = prod.operands
+            t = self.types.get((cname, ops[0])) if ops else None
+            return _type_bytes(t) if t else 0.0
+        if (prod is not None and depth < 4
+                and self._is_transparent_fusion(prod) and prod.operands):
+            return self._operand_bytes(cname, prod.operands[0], depth + 1)
+        t = self.types.get((cname, oname))
+        return _type_bytes(t) if t else 0.0
+
+    def _fusion_bytes(self, cname: str, op: _Op) -> float:
+        """Boundary traffic of a fusion: per-parameter reads (billed at the
+        fused dynamic-slice/gather result size when the parameter is only
+        sliced — scan bodies read ONE layer slice of a stacked array, not
+        the stack) + result writes (billed at the update size when the root
+        is a fused dynamic-update-slice)."""
+        callee = None
+        for mech, c in _called_comps(op):
+            if mech == "calls":
+                callee = c
+        if callee is None or callee not in self.comps:
+            b = _type_bytes(op.type_str)
+            for oname in op.operands:
+                b += self._operand_bytes(cname, oname)
+            return b
+        fops = self.comps[callee]
+        by_name = {o.name: o for o in fops}
+        # consumers of each value inside the fused computation
+        consumers = {}
+        for o in fops:
+            for nm in o.operands:
+                consumers.setdefault(nm, []).append(o)
+        total = 0.0
+        # parameter reads (billed through transparent producer fusions)
+        outer_operands = op.operands
+        for o in fops:
+            if o.opcode != "parameter":
+                continue
+            cons = consumers.get(o.name, [])
+            if cons and all(c.opcode in ("dynamic-slice", "gather")
+                            for c in cons):
+                total += sum(_type_bytes(c.type_str) for c in cons)
+                continue
+            m = re.search(r"parameter\((\d+)\)", o.opcode + "(" +
+                          o.rest) or re.search(r"\((\d+)\)", o.rest)
+            idx = int(m.group(1)) if m else None
+            if idx is not None and idx < len(outer_operands):
+                total += self._operand_bytes(cname, outer_operands[idx])
+            else:
+                total += _type_bytes(o.type_str)
+        # result writes
+        root = next((o for o in fops if o.is_root), fops[-1] if fops else None)
+        if root is not None and root.opcode == "dynamic-update-slice" \
+                and len(root.operands) >= 2:
+            upd = by_name.get(root.operands[1])
+            total += 2.0 * (_type_bytes(upd.type_str) if upd is not None
+                            else _type_bytes(root.type_str))
+        else:
+            total += _type_bytes(op.type_str)
+        return total
+
+    def comp_bytes(self, cname: str) -> float:
+        """Schedule-level HBM traffic of a control computation."""
+        if cname in self._bytes_memo:
+            return self._bytes_memo[cname]
+        self._bytes_memo[cname] = 0.0
+        total = 0.0
+        for op in self.comps.get(cname, []):
+            called = _called_comps(op)
+            if op.opcode == "while":
+                trip = float(self._trip(op))
+                for mech, callee in called:
+                    total += (trip if mech == "body" else trip + 1) \
+                        * self.comp_bytes(callee)
+                continue
+            if op.opcode == "conditional":
+                sub = [self.comp_bytes(c) for _, c in called]
+                total += max(sub) if sub else 0.0
+                continue
+            if op.opcode == "call":
+                total += sum(self.comp_bytes(c) for _, c in called)
+                continue
+            if op.opcode in _FREE_OPS or op.opcode in _FUSABLE_OPS:
+                continue
+            if op.opcode == "fusion":
+                if self._is_transparent_fusion(op):
+                    continue
+                total += self._fusion_bytes(cname, op)
+                continue
+            if op.opcode == "dynamic-update-slice":
+                # in-place region write: read+write the UPDATE, not the stack
+                upd = (self.types.get((cname, op.operands[1]))
+                       if len(op.operands) >= 2 else None)
+                total += 2.0 * (_type_bytes(upd) if upd
+                                else _type_bytes(op.type_str))
+                continue
+            if op.opcode == "dynamic-slice":
+                total += 2.0 * _type_bytes(op.type_str)
+                continue
+            # boundary traffic of materializing ops: result + operands
+            # (dot, reduce, copy, gather/scatter, collectives, sort, ...)
+            b = _type_bytes(op.type_str)
+            for oname in op.operands:
+                b += self._operand_bytes(cname, oname)
+            total += b
+        self._bytes_memo[cname] = total
+        return total
+
+    # -- collectives -----------------------------------------------------------
+
+    def comp_collectives(self, cname: str) -> dict:
+        if cname in self._coll_memo:
+            return self._coll_memo[cname]
+        self._coll_memo[cname] = {k: {"bytes": 0.0, "count": 0.0}
+                                  for k in _COLL_FACTORS}
+        tot = {k: {"bytes": 0.0, "count": 0.0} for k in _COLL_FACTORS}
+        for op in self.comps.get(cname, []):
+            base = op.opcode.replace("-start", "")
+            if base in _COLL_FACTORS and not op.opcode.endswith("-done"):
+                R = _type_bytes(op.type_str)
+                if op.opcode.endswith("-start"):
+                    R /= 2.0              # start result aliases (operand, out)
+                if "_promoted" in op.rest and "f32[" in op.type_str:
+                    # XLA-CPU FloatNormalization promotes bf16 reductions to
+                    # f32 (no native bf16 on host).  TPU runs them at source
+                    # precision — bill the wire at bf16.
+                    R /= 2.0
+                G = _group_size(op.rest)
+                tot[base]["bytes"] += _COLL_FACTORS[base](R, G)
+                tot[base]["count"] += 1
+            for mech, callee in _called_comps(op):
+                mult = float(self._trip(op)) if (op.opcode == "while"
+                                                 and mech == "body") else 1.0
+                sub = self.comp_collectives(callee)
+                for k in _COLL_FACTORS:
+                    tot[k]["bytes"] += mult * sub[k]["bytes"]
+                    tot[k]["count"] += mult * sub[k]["count"]
+        self._coll_memo[cname] = tot
+        return tot
+
+    # -- public ----------------------------------------------------------------
+
+    def totals(self) -> dict:
+        coll = self.comp_collectives(self.entry)
+        coll_total = sum(v["bytes"] for v in coll.values())
+        coll_count = sum(v["count"] for v in coll.values())
+        out = {
+            "flops": self.comp_flops(self.entry),
+            "bytes": self.comp_bytes(self.entry),
+            "collectives": dict(coll, total_bytes=coll_total,
+                                total_count=coll_count),
+        }
+        return out
+
+
+def analyze_text(hlo_text: str) -> dict:
+    return HloCost(hlo_text).totals()

@@ -1,0 +1,36 @@
+"""Production meshes (TPU v5e numbers; DESIGN.md §4).
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+# hardware constants (TPU v5e per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Mesh over whatever local devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def n_chips(mesh) -> int:
+    return int(mesh.devices.size)
+
+
+def batch_axes(mesh) -> tuple:
+    """Axes a global-batch dimension shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,164 @@
+"""Logical sharding rules: param-path -> PartitionSpec, per family.
+
+Conventions (DESIGN.md §4):
+  * LM params: 2-D sharded — last dim over ``model`` (TP), second-to-last
+    over ``data`` (FSDP); stacked layer params carry a leading L axis.
+    Embedding (vocab, d) -> (model, data).  MoE expert stacks
+    (L, E, d, f) -> experts over ``model`` (EP), d over ``data``.
+  * Optimizer state mirrors its param.
+  * GNN params: replicated (tiny); edge arrays sharded over every mesh axis.
+  * RecSys: embedding tables row-sharded over ``model``; MLP TP over
+    ``model``; everything else replicated.
+  * The ``pod`` axis never shards params (pure data parallel across pods).
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axis assignments that do not divide a dimension evenly.
+
+    For a dim assigned a tuple of axes, trailing axes are dropped first
+    (e.g. 1M rows over ('data','model')=256 -> ('data',)=16 when 1M % 256).
+    jax.jit rejects uneven input shardings, and published configs have
+    non-round dims (minicpm3 vocab=73448, DCN d_x0=429).
+    """
+    if spec is None:
+        return P()
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ent in zip(shape, entries):
+        if ent is None:
+            out.append(None)
+            continue
+        axes = list(ent) if isinstance(ent, tuple) else [ent]
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if dim % prod == 0:
+                break
+            axes.pop()
+        out.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes
+                                                      else None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# --------------------------------------------------------------------------
+# LM
+# --------------------------------------------------------------------------
+
+def lm_param_spec(path: str, leaf) -> P:
+    """STORAGE sharding: FSDP over ``data`` x TP over ``model``."""
+    nd = getattr(leaf, "ndim", 0)
+    if "embed" in path and nd == 2:               # (vocab, d)
+        return P("model", "data")
+    if "['layers']" in path:
+        if nd == 4:                               # (L, E, d, f) MoE experts
+            return P(None, "model", "data", None)
+        if nd == 3:                               # (L, d_in, d_out)
+            return P(None, "data", "model")
+        return P()                                # (L, d) norms etc.
+    return P()
+
+
+def lm_param_spec_tp(path: str, leaf) -> P:
+    """COMPUTE sharding: pure TP — what matmuls should run under.
+
+    Weight contraction dims are NEVER sharded: GSPMD otherwise reshards
+    activations to full batch (measured on the 16x16 mesh).  The train step
+    all-gathers FSDP storage into this layout per step (weight-gather idiom;
+    grad transpose = reduce-scatter back to storage).
+    Orientation is path-based: down/out projections contract on dim -2.
+    """
+    nd = getattr(leaf, "ndim", 0)
+    if "embed" in path and nd == 2:               # (vocab, d) vocab-sharded
+        return P("model", None)
+    if "['layers']" in path:
+        down = ("w_down" in path) or ("wo" in path)
+        if nd == 4:                               # (L, E, d, f): EP over E
+            return P(None, "model", None, None)
+        if nd == 3:
+            if "router" in path:
+                return P()
+            return P(None, "model", None) if down else P(None, None, "model")
+        return P()
+    return P()
+
+
+def lm_batch_spec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh))
+
+
+def lm_cache_spec(mesh: Mesh, attn_type: str, batch: int, n_kv: int) -> dict:
+    """Decode-cache specs. Sequence dim shards over ``model`` (flash-decoding
+    style partial softmax); batch over data axes — unless batch < data size,
+    then sequence takes every axis."""
+    b_axes = batch_axes(mesh)
+    b_size = int(np.prod([mesh.shape[a] for a in b_axes]))
+    if batch >= b_size:
+        seq_axes, bat = ("model",), b_axes
+    else:                                          # long_500k: batch=1
+        seq_axes, bat = b_axes + ("model",), ()
+    if attn_type == "mla":
+        return {"c_kv": P(None, bat or None, seq_axes, None),
+                "k_rope": P(None, bat or None, seq_axes, None)}
+    return {"k": P(None, bat or None, None, seq_axes, None),
+            "v": P(None, bat or None, None, seq_axes, None)}
+
+
+# --------------------------------------------------------------------------
+# GNN
+# --------------------------------------------------------------------------
+
+def gnn_param_spec(path: str, leaf) -> P:
+    return P()                                     # replicated (small)
+
+
+def gnn_edge_spec(mesh: Mesh) -> P:
+    """Edges shard over the whole mesh (graph parallelism)."""
+    return P(tuple(mesh.axis_names))
+
+
+# --------------------------------------------------------------------------
+# RecSys
+# --------------------------------------------------------------------------
+
+def recsys_param_spec(path: str, leaf) -> P:
+    nd = getattr(leaf, "ndim", 0)
+    if "tables" in path and nd == 2:               # (V, embed_dim)
+        return P("model", None)
+    if "mlp_w" in path and nd == 2:                # (d_in, d_h) TP
+        return P(None, "model")
+    return P()
+
+
+PARAM_RULES = {"lm": lm_param_spec, "gnn": gnn_param_spec,
+               "recsys": recsys_param_spec}
+
+
+# --------------------------------------------------------------------------
+# tree helpers
+# --------------------------------------------------------------------------
+
+def tree_shardings(tree, mesh: Mesh, rule):
+    import jax
+    flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [NamedSharding(mesh, sanitize_spec(
+        rule(jax.tree_util.keystr(p), l), l.shape, mesh))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def opt_state_shardings(params_sharding, mesh: Mesh):
+    """Optimizer state mirrors params; the step counter is replicated."""
+    import jax
+    return {"mu": params_sharding,
+            "nu": params_sharding,
+            "step": NamedSharding(mesh, P())}

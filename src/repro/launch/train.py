@@ -1,0 +1,149 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs REAL training on the local devices (reduced/smoke configs on CPU; the
+full configs are for the dry-run meshes).  Wires together: config registry ->
+data pipeline -> jitted train step -> checkpointing -> watchdog.
+
+Fault-tolerance wiring (works the same on a real cluster):
+  * checkpoint every --ckpt-every steps (async, atomic) + data-stream state;
+  * crash/restart: rerun the same command; it resumes from LATEST
+    (bitwise-identical stream continuation — counter-based RNG);
+  * straggler watchdog: if a step exceeds --step-timeout x the trailing
+    median, the launcher aborts with exit code 75 so the job manager
+    relaunches from LATEST (on multi-host TPU a hung collective never
+    returns; timeout-and-relaunch is the standard mitigation);
+  * elastic restart: checkpoints hold full logical arrays — a different
+    device count on restart just re-shards (training/elastic.py).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import statistics
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import pipeline as DP
+from repro.models import transformer as TF
+from repro.models import recsys as RS
+from repro.training.optimizer import OptimizerConfig
+from repro.training import train_loop as TL
+
+
+def build_lm(arch_def, smoke: bool, batch: int, seq_len: int):
+    cfg = arch_def.make_smoke() if smoke else arch_def.make_full()
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    stream = DP.TokenStream(batch=batch, seq_len=seq_len, vocab=cfg.vocab)
+    loss = functools.partial(TF.train_step_loss, cfg=cfg)
+    return params, stream, lambda p, b: loss(p, batch=b)
+
+
+def build_recsys(arch_def, smoke: bool, batch: int):
+    cfg = arch_def.make_smoke() if smoke else arch_def.make_full()
+    params = RS.dcnv2_init(jax.random.PRNGKey(0), cfg)
+    stream = DP.RecsysStream(batch=batch, n_dense=cfg.n_dense,
+                             n_sparse=cfg.n_sparse, vocabs=cfg.vocabs,
+                             max_hots=cfg.max_hots)
+    return params, stream, lambda p, b: RS.ctr_loss(p, cfg, b)
+
+
+def build_gnn(arch_def, smoke: bool, batch: int):
+    from repro.graphs.generators import mesh2d
+    from repro.launch.cells import _gnn_loss_fn
+    from repro.models import gnn as GNN
+    from repro.models import equivariant as EQ
+    model = arch_def.extras["model"]
+    if model == "nequip":
+        cfg = arch_def.make_smoke()
+        stream = DP.MoleculeStream(n_nodes=10, n_edges=24, batch=batch,
+                                   n_species=cfg.n_species, d_feat=0)
+        b0 = next(stream)
+        n_nodes = b0["species"].shape[0]
+        params = EQ.nequip_init(jax.random.PRNGKey(0), cfg)
+
+        def loss(p, b):
+            return EQ.energy_loss(p, cfg, b)
+        return params, stream, loss
+    cfg = arch_def.make_smoke()
+    g = mesh2d(24, 24)
+    stream = DP.FullGraphStream(g, d_feat=cfg.d_in,
+                                n_classes=getattr(cfg, "n_classes",
+                                                  getattr(cfg, "d_out", 3)),
+                                pad_edges_to=1024)
+    init = {"gat": GNN.gat_init, "mgn": GNN.mgn_init,
+            "gatedgcn": GNN.gatedgcn_init}[model]
+    params = init(jax.random.PRNGKey(0), cfg)
+    shp = {"mode": "full", "d_feat": cfg.d_in, "n_classes": 3}
+    n_nodes = g.n_vertices + 1
+    loss_fn = _gnn_loss_fn(arch_def, shp, cfg, n_nodes)
+
+    def loss(p, b):
+        if model == "mgn" and "edge_feats" not in b:
+            b = dict(b, edge_feats=jnp.zeros((b["src"].shape[0], 4),
+                                             jnp.float32))
+        return loss_fn(p, b)
+    return params, stream, loss
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (needs real accelerators)")
+    ap.add_argument("--step-timeout", type=float, default=10.0,
+                    help="abort (exit 75) if a step exceeds this many x the "
+                         "trailing-median step time (straggler watchdog)")
+    args = ap.parse_args(argv)
+
+    arch_def = configs.get(args.arch)
+    smoke = not args.full
+    if arch_def.family == "lm":
+        params, stream, loss = build_lm(arch_def, smoke, args.batch,
+                                        args.seq_len)
+    elif arch_def.family == "recsys":
+        params, stream, loss = build_recsys(arch_def, smoke, args.batch)
+    else:
+        params, stream, loss = build_gnn(arch_def, smoke, args.batch)
+
+    opt_cfg = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                              total_steps=args.steps)
+    loop_cfg = TL.TrainLoopConfig(
+        total_steps=args.steps, microbatches=args.microbatches,
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir, log_every=5)
+
+    times = []
+
+    def watchdog(m):
+        print(f"  step {m['step']:5d} loss {m['loss']:.4f} "
+              f"({m['sec_per_step']:.3f}s/step)", flush=True)
+        times.append(m["sec_per_step"])
+        if len(times) >= 5:
+            med = statistics.median(times[-20:])
+            if times[-1] > args.step_timeout * med:
+                print(f"WATCHDOG: step took {times[-1]:.1f}s "
+                      f"(> {args.step_timeout}x median {med:.1f}s); "
+                      "exiting 75 for relaunch-from-LATEST", file=sys.stderr)
+                raise SystemExit(75)
+
+    to_dev = lambda b: jax.tree.map(jnp.asarray, b)
+    params, _, hist = TL.run(loss, params, stream, opt_cfg, loop_cfg,
+                             to_device=to_dev, on_metrics=watchdog)
+    if hist:
+        print(f"final loss {hist[-1]['loss']:.4f} after {args.steps} steps")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

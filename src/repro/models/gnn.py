@@ -1,0 +1,317 @@
+"""GNN architectures: GAT, MeshGraphNet, GatedGCN.
+
+Message passing is built on ``jax.ops.segment_sum/max`` over COO edge lists —
+the JAX-native scatter idiom (no sparse formats needed).  Full-graph cells
+(cora, ogb_products) use COO; sampled-minibatch cells use the sampler's
+per-layer ELL blocks via the same segment ops on flattened (dst, slot) pairs.
+Batched small graphs (molecule) are flattened block-diagonally by the data
+pipeline, so they are just another COO problem.
+
+Coloring hook (the paper's technique, DESIGN.md §5): ``edge_schedule`` may
+carry a coloring-derived edge ordering; aggregation is then performed
+color-class by color-class, which makes accumulation order deterministic and
+conflict-free — the TPU analogue of the paper's motivating use (safe parallel
+execution of irregular updates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _init_dense
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+def mlp_init(key, dims, dtype=jnp.float32, layernorm=False):
+    ks = jax.random.split(key, len(dims) - 1)
+    p = {"w": [], "b": []}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        p["w"].append(_init_dense(ks[i], a, b, dtype))
+        p["b"].append(jnp.zeros((b,), dtype))
+    if layernorm:
+        p["ln_scale"] = jnp.ones((dims[-1],), jnp.float32)
+        p["ln_bias"] = jnp.zeros((dims[-1],), jnp.float32)
+    return p
+
+
+def mlp_apply(p, x, act=jax.nn.relu):
+    n = len(p["w"])
+    for i in range(n):
+        x = x @ p["w"][i] + p["b"][i]
+        if i < n - 1:
+            x = act(x)
+    if "ln_scale" in p:
+        mu = x.mean(-1, keepdims=True)
+        var = x.var(-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + 1e-6) * p["ln_scale"] + p["ln_bias"]
+    return x
+
+
+def segment_softmax(scores, seg_ids, n_segments):
+    """Softmax over edges grouped by destination (numerically stable)."""
+    smax = jax.ops.segment_max(scores, seg_ids, n_segments)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    e = jnp.exp(scores - smax[seg_ids])
+    ssum = jax.ops.segment_sum(e, seg_ids, n_segments)
+    return e / jnp.maximum(ssum[seg_ids], 1e-16)
+
+
+# --------------------------------------------------------------------------
+# GAT  (arXiv:1710.10903) — SDDMM-style edge scores + segment softmax
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+    final_heads: int = 1          # final layer averages heads
+
+
+def gat_init(key, cfg: GATConfig):
+    ks = jax.random.split(key, cfg.n_layers)
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        H = cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        k1, k2, k3 = jax.random.split(ks[i], 3)
+        layers.append({
+            "w": _init_dense(k1, d_in, H * d_out),
+            "a_src": (jax.random.normal(k2, (H, d_out)) * 0.1),
+            "a_dst": (jax.random.normal(k3, (H, d_out)) * 0.1),
+        })
+        d_in = d_out * (1 if last else H)
+    return {"layers": layers}
+
+
+def gat_apply(params, cfg: GATConfig, feats, src, dst, n_nodes):
+    x = feats
+    for i, lp in enumerate(params["layers"]):
+        last = i == len(params["layers"]) - 1
+        H = cfg.n_heads
+        d_out = lp["w"].shape[1] // H
+        h = (x @ lp["w"]).reshape(-1, H, d_out)
+        e = (jax.nn.leaky_relu(
+            (h[src] * lp["a_src"]).sum(-1) + (h[dst] * lp["a_dst"]).sum(-1),
+            0.2))                                        # (E, H)
+        alpha = jax.vmap(lambda s: segment_softmax(s, dst, n_nodes),
+                         in_axes=1, out_axes=1)(e)
+        msg = h[src] * alpha[..., None]
+        agg = jax.ops.segment_sum(msg, dst, n_nodes)      # (N, H, d_out)
+        x = agg.mean(1) if last else jax.nn.elu(agg.reshape(n_nodes, H * d_out))
+    return x
+
+
+# --------------------------------------------------------------------------
+# MeshGraphNet (arXiv:2010.03409) — encode-process-decode with edge state
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MGNConfig:
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_in: int = 3
+    d_edge_in: int = 4
+    d_out: int = 3
+
+
+def _mlp_dims(d_in, d_h, n_hidden):
+    return [d_in] + [d_h] * n_hidden + [d_h]
+
+
+def mgn_init(key, cfg: MGNConfig):
+    ks = jax.random.split(key, cfg.n_layers * 2 + 3)
+    d = cfg.d_hidden
+    p = {
+        "node_enc": mlp_init(ks[0], _mlp_dims(cfg.d_in, d, cfg.mlp_layers - 1),
+                             layernorm=True),
+        "edge_enc": mlp_init(ks[1], _mlp_dims(cfg.d_edge_in, d,
+                                              cfg.mlp_layers - 1),
+                             layernorm=True),
+        "decoder": mlp_init(ks[2], [d] * cfg.mlp_layers + [cfg.d_out]),
+        "blocks": [],
+    }
+    for i in range(cfg.n_layers):
+        p["blocks"].append({
+            "edge_mlp": mlp_init(ks[3 + 2 * i], _mlp_dims(3 * d, d,
+                                                          cfg.mlp_layers - 1),
+                                 layernorm=True),
+            "node_mlp": mlp_init(ks[4 + 2 * i], _mlp_dims(2 * d, d,
+                                                          cfg.mlp_layers - 1),
+                                 layernorm=True),
+        })
+    return p
+
+
+def mgn_apply(params, cfg: MGNConfig, feats, edge_feats, src, dst, n_nodes):
+    h = mlp_apply(params["node_enc"], feats)
+    e = mlp_apply(params["edge_enc"], edge_feats)
+    for blk in params["blocks"]:
+        e = e + mlp_apply(blk["edge_mlp"],
+                          jnp.concatenate([e, h[src], h[dst]], -1))
+        agg = jax.ops.segment_sum(e, dst, n_nodes)
+        h = h + mlp_apply(blk["node_mlp"], jnp.concatenate([h, agg], -1))
+    return mlp_apply(params["decoder"], h)
+
+
+# --------------------------------------------------------------------------
+# GatedGCN (arXiv:1711.07553 / benchmarking-gnns 2003.00982)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_in: int = 1433
+    d_out: int = 7
+
+
+def gatedgcn_init(key, cfg: GatedGCNConfig):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    p = {"embed": _init_dense(ks[0], cfg.d_in, d),
+         "readout": _init_dense(ks[1], d, cfg.d_out), "blocks": []}
+    for i in range(cfg.n_layers):
+        k = jax.random.split(ks[2 + i], 5)
+        p["blocks"].append({n: _init_dense(k[j], d, d)
+                            for j, n in enumerate("ABCDE")})
+    return p
+
+
+def gatedgcn_apply(params, cfg: GatedGCNConfig, feats, src, dst, n_nodes):
+    h = feats @ params["embed"]
+    e = jnp.zeros((src.shape[0], cfg.d_hidden), h.dtype)
+    for blk in params["blocks"]:
+        e_new = e + h[src] @ blk["D"] + h[dst] @ blk["E"]
+        eta = jax.nn.sigmoid(e_new)
+        msg = eta * (h[src] @ blk["B"])
+        denom = jax.ops.segment_sum(eta, dst, n_nodes) + 1e-6
+        agg = jax.ops.segment_sum(msg, dst, n_nodes) / denom
+        h_new = h @ blk["A"] + agg
+        h = h + jax.nn.relu(_bn_free_norm(h_new))
+        e = e_new
+    return h @ params["readout"]
+
+
+def _bn_free_norm(x):
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6)
+
+
+# --------------------------------------------------------------------------
+# GatedGCN with HALO EXCHANGE (shard_map) — the paper's partition/boundary
+# insight applied to full-graph training (EXPERIMENTS.md §Perf cell B).
+#
+# Replicated-feature GNN training all-reduces a full (N, d) partial sum per
+# layer per direction (measured 109 GB wire on gatedgcn x ogb_products).
+# With nodes block-partitioned (partition.py) each shard owns its dst
+# scatter entirely; only BOUNDARY node features cross shards, via one
+# all-gather of (max_b, d) per layer — wire shrinks by the boundary
+# fraction, exactly the replicated->halo trade of core/distributed.py.
+# --------------------------------------------------------------------------
+
+
+def gatedgcn_halo_apply(params, cfg, feats_loc, src_loc, dst_loc, boundary,
+                        ghost_flat, axis_names, n_shards: int):
+    """Per-shard GatedGCN forward (call under shard_map).
+
+    feats_loc: (n_loc, d_in) owned nodes' features
+    src_loc:   (E_loc,) local slot [0, n_loc) or ghost slot n_loc+g
+    dst_loc:   (E_loc,) local slot (every edge's dst is owned)
+    boundary:  (max_b,) local slots this shard must publish (-1 pad)
+    ghost_flat:(max_g,) index into the gathered (D*max_b,) boundary payload
+    """
+    n_loc = feats_loc.shape[0]
+    max_b = boundary.shape[0]
+    max_g = ghost_flat.shape[0]
+    d = cfg.d_hidden
+
+    def exchange(h):
+        b_idx = jnp.clip(boundary, 0, n_loc - 1)
+        payload = jnp.where((boundary >= 0)[:, None], h[b_idx], 0.0)
+        allp = jax.lax.all_gather(payload, axis_names, tiled=True)
+        allp = allp.reshape(n_shards * max_b, d)
+        g_idx = jnp.clip(ghost_flat, 0, n_shards * max_b - 1)
+        ghosts = jnp.where((ghost_flat >= 0)[:, None], allp[g_idx], 0.0)
+        return jnp.concatenate([h, ghosts], axis=0)      # (n_loc+max_g, d)
+
+    h = feats_loc @ params["embed"]
+    e = jnp.zeros((src_loc.shape[0], d), h.dtype)
+    for blk in params["blocks"]:
+        tab = exchange(h)                                # 1 collective/layer
+        hs, hd = tab[src_loc], h[dst_loc]
+        e_new = e + hs @ blk["D"] + hd @ blk["E"]
+        eta = jax.nn.sigmoid(e_new)
+        msg = eta * (hs @ blk["B"])
+        denom = jax.ops.segment_sum(eta, dst_loc, n_loc) + 1e-6
+        agg = jax.ops.segment_sum(msg, dst_loc, n_loc) / denom
+        h_new = h @ blk["A"] + agg
+        h = h + jax.nn.relu(_bn_free_norm(h_new))
+        e = e_new
+    return h @ params["readout"]
+
+
+def gatedgcn_halo_loss(params, cfg, batch, axis_names, n_shards: int):
+    """Mean node-classification loss over shards (psum-normalized)."""
+    logits = gatedgcn_halo_apply(
+        params, cfg, batch["feats"], batch["src"], batch["dst"],
+        batch["boundary"], batch["ghost_flat"], axis_names, n_shards)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None].clip(0), 1)[:, 0]
+    mask = batch["train_mask"]
+    s = jax.lax.psum((nll * mask).sum(), axis_names)
+    n = jax.lax.psum(mask.sum(), axis_names)
+    return s / jnp.maximum(n, 1.0)
+
+
+# --------------------------------------------------------------------------
+# losses (per task kind)
+# --------------------------------------------------------------------------
+
+def node_classification_loss(logits, labels, mask=None):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].clip(0), 1)[:, 0]
+    if mask is None:
+        mask = labels >= 0
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+def node_regression_loss(pred, target, mask=None):
+    se = ((pred - target) ** 2).sum(-1)
+    if mask is not None:
+        return (se * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return se.mean()
+
+
+# --------------------------------------------------------------------------
+# coloring-scheduled aggregation (the paper's technique plugged into GNNs)
+# --------------------------------------------------------------------------
+
+def colored_segment_sum(msg, dst, n_nodes, edge_color, n_colors: int):
+    """Aggregate messages color-class by color-class.
+
+    ``edge_color`` comes from coloring the line-graph-lite (edges conflicting
+    iff same dst); within a color every dst appears once, so each class is a
+    conflict-free scatter — deterministic accumulation order independent of
+    edge permutation, the paper's dependency-analysis use-case.
+    """
+    out = jnp.zeros((n_nodes,) + msg.shape[1:], msg.dtype)
+
+    def body(c, out):
+        m = (edge_color == c)[:, None]
+        return out + jax.ops.segment_sum(msg * m, dst, n_nodes)
+
+    return jax.lax.fori_loop(0, n_colors, body, out)

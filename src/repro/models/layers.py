@@ -1,0 +1,497 @@
+"""Transformer building blocks: RMSNorm, RoPE (on-the-fly), GQA attention with
+optional qk-norm, chunked (blockwise-softmax) attention, SwiGLU, embedding and
+vocab-sharded-safe cross entropy.
+
+Pure-functional: params are nested dicts of jnp arrays; init fns take a
+jax.random key.  Logical sharding axes are attached by the launcher
+(launch/sharding.py) via param-path rules, not here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init_dense(key, d_in, d_out, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * params["scale"]).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE — computed on the fly from position ids (no precomputed table; long
+# contexts would otherwise hold a (max_pos, d) cos/sin buffer in HBM)
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., L, D) with D even; positions: (..., L) int32."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., L, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention cores
+# --------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      chunk_q: int = 1024, chunk_k: int = 1024,
+                      repeat_kv: bool = True, flash_bwd: bool = False):
+    """Memory-efficient blockwise-softmax attention (pure jnp, autodiff-safe).
+
+    q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D).  q_offset: absolute position of
+    q[...,0] minus that of k[...,0] (decode: Lk - Lq).  Scores materialize
+    only per (chunk_q x chunk_k) tile -> O(L) memory.
+
+    GQA handling: with ``repeat_kv`` (default) K/V are repeated to Hq heads
+    so EVERY tensor keeps a single head axis — under tensor parallelism the
+    head axis then shards cleanly even when Hkv < mesh model size; the
+    grouped (B, Hkv, G, ...) form forces GSPMD into involuntary full
+    rematerialization (measured: ~50x collective-bytes blowup on the 16x16
+    mesh).  repeat_kv=False keeps the memory-optimal grouped form for
+    single-device runs.
+    """
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lk, _ = k.shape
+    scale = 1.0 / np.sqrt(D)
+    if repeat_kv and Hkv != Hq:
+        k = jnp.repeat(k, Hq // Hkv, axis=1)
+        v = jnp.repeat(v, Hq // Hkv, axis=1)
+        Hkv = Hq
+    G = Hq // Hkv
+    cq = min(chunk_q, Lq)
+    ck = min(chunk_k, Lk)
+    nq, nk = -(-Lq // cq), -(-Lk // ck)
+    Lq_p, Lk_p = nq * cq, nk * ck
+    if flash_bwd and Hkv == Hq and Lq_p == Lq and Lk_p == Lk:
+        # custom-VJP path: O(L) residuals, FA-2 backward schedule
+        fa = _make_flash_attention(causal, int(q_offset), cq, ck)
+        return fa(q, k, v)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Lq_p - Lq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Lk_p - Lk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Lk_p - Lk), (0, 0)))
+    qp = qp.reshape(B, Hkv, G, nq, cq, D)
+    kp = kp.reshape(B, Hkv, nk, ck, D)
+    vp = vp.reshape(B, Hkv, nk, ck, D)
+
+    def q_block(carry_qi, qb):
+        # qb: (B, Hkv, G, cq, D).  Loop indices (qi, kj) ride the CARRY, not
+        # scan xs: as xs-arrays XLA hoists the per-tile causal masks out of
+        # the loop into an (nq x nk x B x cq x ck) stack (measured 268MB/layer
+        # on the 16x16 mesh); carried scalars cannot be precomputed.
+        def kv_step(carry, inputs):
+            acc, m, l, kj = carry
+            kb, vb = inputs
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            rows = carry_qi * cq + jnp.arange(cq)
+            cols = kj * ck + jnp.arange(ck)
+            ok = cols[None, :] < Lk
+            if causal:
+                ok = ok & (cols[None, :] <= rows[:, None] + q_offset)
+            s = jnp.where(ok[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (acc, m_new, l_new, kj + 1), None
+
+        acc0 = jnp.zeros((B, Hkv, G, cq, D), jnp.float32)
+        m0 = jnp.full((B, Hkv, G, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        ks = (jnp.moveaxis(kp, 2, 0), jnp.moveaxis(vp, 2, 0))
+        (acc, m, l, _), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0, jnp.int32(0)), ks)
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    def q_step(carry, qb):
+        qi = carry
+        return qi + 1, q_block(qi, qb)
+
+    _, outs = jax.lax.scan(q_step, jnp.int32(0), jnp.moveaxis(qp, 3, 0))
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, Hq, Lq_p, D)[:, :, :Lq]
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# chunked attention with FLASH BACKWARD (custom VJP)
+#
+# Plain autodiff through the blockwise-softmax scan saves the probability
+# tiles of EVERY (q-block, kv-block) pair — an O(L^2) residual stack that
+# measured 17GB/layer/device on the qwen3-32b train_4k cell.  The custom
+# VJP saves only (q, k, v, out, lse) = O(L) and recomputes tiles inside the
+# backward loops (FlashAttention-2 schedule): pass 1 accumulates dQ over kv
+# blocks, pass 2 accumulates dK/dV over q blocks.
+# --------------------------------------------------------------------------
+
+import functools as _functools
+
+
+def _fa_fwd_chunked(q, k, v, causal, q_offset, cq, ck, scale):
+    """Forward chunked pass returning (out, lse); all heads = Hq."""
+    B, H, Lq, D = q.shape
+    Lk = k.shape[2]
+    nq, nk = Lq // cq, Lk // ck
+    qp = q.reshape(B, H, nq, cq, D)
+    kp = k.reshape(B, H, nk, ck, D)
+    vp = v.reshape(B, H, nk, ck, D)
+
+    def q_step(qi, qb):
+        def kv_step(carry, inputs):
+            acc, m, l, kj = carry
+            kb, vb = inputs
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                rows = qi * cq + jnp.arange(cq)
+                cols = kj * ck + jnp.arange(ck)
+                ok = cols[None, :] <= rows[:, None] + q_offset
+                s = jnp.where(ok[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (acc, m_new, l_new, kj + 1), None
+
+        acc0 = jnp.zeros((B, H, cq, D), jnp.float32)
+        m0 = jnp.full((B, H, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        ks = (jnp.moveaxis(kp, 2, 0), jnp.moveaxis(vp, 2, 0))
+        (acc, m, l, _), _ = jax.lax.scan(kv_step, (acc0, m0, l0,
+                                                   jnp.int32(0)), ks)
+        l = jnp.maximum(l, 1e-30)
+        return acc / l[..., None], m + jnp.log(l)
+
+    def q_scan(carry, qb):
+        qi = carry
+        o, lse = q_step(qi, qb)
+        return qi + 1, (o, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_scan, jnp.int32(0),
+                                   jnp.moveaxis(qp, 2, 0))
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, Lq, D)
+    lse = jnp.moveaxis(lses, 0, 2).reshape(B, H, Lq)
+    return out.astype(q.dtype), lse
+
+
+@_functools.lru_cache(maxsize=None)
+def _make_flash_attention(causal: bool, q_offset: int, cq: int, ck: int):
+    @jax.custom_vjp
+    def fa(q, k, v):
+        scale = 1.0 / np.sqrt(q.shape[-1])
+        out, _ = _fa_fwd_chunked(q, k, v, causal, q_offset, cq, ck, scale)
+        return out
+
+    def fa_fwd(q, k, v):
+        scale = 1.0 / np.sqrt(q.shape[-1])
+        out, lse = _fa_fwd_chunked(q, k, v, causal, q_offset, cq, ck, scale)
+        return out, (q, k, v, out, lse)
+
+    def fa_bwd(res, do):
+        q, k, v, out, lse = res
+        B, H, Lq, D = q.shape
+        Lk = k.shape[2]
+        scale = 1.0 / np.sqrt(D)
+        nq, nk = Lq // cq, Lk // ck
+        qp = jnp.moveaxis(q.reshape(B, H, nq, cq, D), 2, 0)
+        kp = jnp.moveaxis(k.reshape(B, H, nk, ck, D), 2, 0)
+        vp = jnp.moveaxis(v.reshape(B, H, nk, ck, D), 2, 0)
+        dop = jnp.moveaxis(do.reshape(B, H, nq, cq, D), 2, 0)
+        lsep = jnp.moveaxis(lse.reshape(B, H, nq, cq), 2, 0)
+        Drow = (do.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+        Dp = jnp.moveaxis(Drow.reshape(B, H, nq, cq), 2, 0)
+
+        def tile(qi, kj, qb, kb, lse_b):
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                rows = qi * cq + jnp.arange(cq)
+                cols = kj * ck + jnp.arange(ck)
+                ok = cols[None, :] <= rows[:, None] + q_offset
+                s = jnp.where(ok[None, None], s, -1e30)
+            return jnp.exp(s - lse_b[..., None])        # (B,H,cq,ck)
+
+        # pass 1: dQ, streaming over kv blocks per q block
+        def dq_qstep(qi, inputs):
+            qb, dob, lse_b, D_b = inputs
+
+            def kv_step(carry, kv):
+                dq, kj = carry
+                kb, vb = kv
+                p = tile(qi, kj, qb, kb, lse_b)
+                dp = jnp.einsum("bhqd,bhkd->bhqk", dob, vb,
+                                preferred_element_type=jnp.float32)
+                ds = p * (dp - D_b[..., None])
+                dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds.astype(kb.dtype),
+                                     kb,
+                                     preferred_element_type=jnp.float32)
+                return (dq, kj + 1), None
+
+            dq0 = jnp.zeros((B, H, cq, D), jnp.float32)
+            (dq, _), _ = jax.lax.scan(kv_step, (dq0, jnp.int32(0)), (kp, vp))
+            return dq * scale
+
+        def dq_scan(carry, inputs):
+            qi = carry
+            return qi + 1, dq_qstep(qi, inputs)
+
+        _, dqs = jax.lax.scan(dq_scan, jnp.int32(0), (qp, dop, lsep, Dp))
+        dq = jnp.moveaxis(dqs, 0, 2).reshape(B, H, Lq, D).astype(q.dtype)
+
+        # pass 2: dK/dV, streaming over q blocks per kv block
+        def dkv_kstep(kj, kb, vb):
+            def q_step(carry, inputs):
+                dk, dv, qi = carry
+                qb, dob, lse_b, D_b = inputs
+                p = tile(qi, kj, qb, kb, lse_b)
+                dv = dv + jnp.einsum("bhqk,bhqd->bhkd", p.astype(dob.dtype),
+                                     dob,
+                                     preferred_element_type=jnp.float32)
+                dp = jnp.einsum("bhqd,bhkd->bhqk", dob, vb,
+                                preferred_element_type=jnp.float32)
+                ds = p * (dp - D_b[..., None])
+                dk = dk + jnp.einsum("bhqk,bhqd->bhkd", ds.astype(qb.dtype),
+                                     qb,
+                                     preferred_element_type=jnp.float32)
+                return (dk, dv, qi + 1), None
+
+            dk0 = jnp.zeros((B, H, ck, D), jnp.float32)
+            dv0 = jnp.zeros((B, H, ck, D), jnp.float32)
+            (dk, dv, _), _ = jax.lax.scan(q_step, (dk0, dv0, jnp.int32(0)),
+                                          (qp, dop, lsep, Dp))
+            return dk * scale, dv
+
+        def dkv_scan(carry, kv):
+            kj = carry
+            kb, vb = kv
+            dk, dv = dkv_kstep(kj, kb, vb)
+            return kj + 1, (dk, dv)
+
+        _, (dks, dvs) = jax.lax.scan(dkv_scan, jnp.int32(0), (kp, vp))
+        dk = jnp.moveaxis(dks, 0, 2).reshape(B, H, Lk, D).astype(k.dtype)
+        dv = jnp.moveaxis(dvs, 0, 2).reshape(B, H, Lk, D).astype(v.dtype)
+        return dq, dk, dv
+
+    fa.defvjp(fa_fwd, fa_bwd)
+    return fa
+
+
+def decode_attention(q, k, v, length=None, repeat_kv: bool = True,
+                     seq_axis=None, extra_slot: bool = True):
+    """Single-token decode: q (B, Hq, 1, D) vs cache k,v (B, Hkv, S, D).
+
+    Plain softmax over the cache — O(S) memory; with the cache sequence dim
+    sharded, GSPMD turns the max/sum reductions into the flash-decoding
+    partial-softmax collectives.  ``length`` (B,) masks cache slots >= length
+    (fixed-capacity caches).
+
+    GQA: like chunked_attention, K/V are repeated to Hq on the (replicated)
+    head dim by default — the grouped (B, Hkv, G, ...) reshape cannot be
+    sharded when Hkv < model-axis size and forces a full per-layer cache
+    reshard (the 'involuntary full rematerialization' SPMD path).
+    """
+    B, Hq, _, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    scale = 1.0 / np.sqrt(D)
+    if isinstance(seq_axis, str) and "," in seq_axis:
+        seq_axis = tuple(seq_axis.split(","))
+    if seq_axis is not None:
+        # flash-decoding schedule, forced: replicate the (tiny) q so the
+        # grouped (B, Hkv, G) reshape carries no sharding at all, and keep
+        # the (huge) cache sequence-sharded — GSPMD otherwise all-gathers
+        # or reshards the cache per layer to match q's head sharding.
+        from jax.sharding import PartitionSpec as P
+        q = jax.lax.with_sharding_constraint(q, P())
+    elif repeat_kv and Hkv != Hq:
+        k = jnp.repeat(k, Hq // Hkv, axis=1)
+        v = jnp.repeat(v, Hq // Hkv, axis=1)
+        Hkv = Hq
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if seq_axis is not None:
+        # pin the scores to sequence sharding: the SPMD solver otherwise
+        # picks (head x Dh) contraction sharding for the QK einsum, which
+        # drags the cache into an involuntary full reshard
+        from jax.sharding import PartitionSpec as P
+        s = jax.lax.with_sharding_constraint(
+            s, P(None, None, None, seq_axis))
+    if length is not None:
+        idx = jnp.arange(S)[None, None, None, :]
+        ln = length[:, None, None, None]
+        # slots < length are valid; with extra_slot the appended (concat)
+        # current-token slot at S-1 is too.  The write-then-attend decode
+        # path passes extra_slot=False with length already incremented —
+        # the cache keeps its power-of-two S and stays evenly sharded
+        # (a concat to S+1 is unshardable: full cache all-gather).
+        mask = ((idx < ln) | (idx == S - 1)) if extra_slot else (idx < ln)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer (qwen3 / phi / qwen2-moe style) with optional qk-norm
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+
+
+def gqa_init(key, cfg: AttnConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": _init_dense(ks[0], d, H * Dh, dtype),
+        "wk": _init_dense(ks[1], d, Hkv * Dh, dtype),
+        "wv": _init_dense(ks[2], d, Hkv * Dh, dtype),
+        "wo": _init_dense(ks[3], H * Dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(Dh)
+        p["k_norm"] = rmsnorm_init(Dh)
+    return p
+
+
+def gqa_project_qkv(params, cfg: AttnConfig, x, positions):
+    """x: (B, L, d) -> q (B, H, L, Dh), k/v (B, Hkv, L, Dh), roped."""
+    B, L, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, L, H, Dh)
+    k = (x @ params["wk"]).reshape(B, L, Hkv, Dh)
+    v = (x @ params["wv"]).reshape(B, L, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = jnp.moveaxis(q, 1, 2)
+    k = jnp.moveaxis(k, 1, 2)
+    v = jnp.moveaxis(v, 1, 2)
+    q = rope(q, positions[:, None, :], cfg.rope_theta)
+    k = rope(k, positions[:, None, :], cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attend(params, cfg: AttnConfig, x, positions, *, causal=True,
+               kv_cache=None, cache_length=None, chunk_q=1024, chunk_k=1024,
+               flash_bwd=False, decode_seq_axis=None):
+    """Returns (out (B, L, d), new_kv) — new_kv is (k, v) to append.
+
+    kv_cache: fixed-capacity (k, v) of shape (B, Hkv, S, Dh); cache_length
+    (B,) marks valid entries.  The current step's k/v are appended virtually
+    (concat) so the token attends to itself without a prior cache write.
+    """
+    B, L, _ = x.shape
+    q, k, v = gqa_project_qkv(params, cfg, x, positions)
+    if kv_cache is not None:
+        ck, cv = kv_cache            # (B, Hkv, S, Dh)
+        S = ck.shape[2]
+        if decode_seq_axis is not None:
+            # replicate the one-token k/v BEFORE concat with the
+            # sequence-sharded cache: concat of mismatched shardings makes
+            # GSPMD reshard the whole cache (involuntary full remat).
+            from jax.sharding import PartitionSpec as P
+            k = jax.lax.with_sharding_constraint(k, P())
+            v = jax.lax.with_sharding_constraint(v, P())
+        k_full = jnp.concatenate([ck, k], axis=2)
+        v_full = jnp.concatenate([cv, v], axis=2)
+        if L == 1:
+            eff_len = (cache_length if cache_length is not None
+                       else jnp.full((B,), S, jnp.int32))
+            # decode_attention treats the final (appended) slot as always valid
+            o = decode_attention(q, k_full, v_full, length=eff_len,
+                                 seq_axis=decode_seq_axis)
+        else:
+            o = chunked_attention(q, k_full, v_full, causal=causal,
+                                  q_offset=S, chunk_q=chunk_q,
+                                  chunk_k=chunk_k, flash_bwd=flash_bwd)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, q_offset=0,
+                              chunk_q=chunk_q, chunk_k=chunk_k,
+                              flash_bwd=flash_bwd)
+    o = jnp.moveaxis(o, 1, 2).reshape(B, L, cfg.n_heads * cfg.head_dim)
+    return o @ params["wo"], (k, v)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def swiglu_init(key, d_model, d_ff, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _init_dense(ks[0], d_model, d_ff, dtype),
+        "w_up": _init_dense(ks[1], d_model, d_ff, dtype),
+        "w_down": _init_dense(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params, x):
+    return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) \
+        @ params["w_down"]
+
+
+# --------------------------------------------------------------------------
+# embedding + loss
+# --------------------------------------------------------------------------
+
+def embedding_init(key, vocab, d_model, dtype=jnp.bfloat16):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x):
+    """Tied unembedding: (B, L, d) @ (d, vocab)."""
+    return x @ params["table"].T.astype(x.dtype)
+
+
+def cross_entropy(logits, labels, ignore_id: int = -1):
+    """Mean token NLL; safe when the vocab axis is sharded (logsumexp's
+    max/sum reduce across shards via GSPMD collectives)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    mask = labels != ignore_id
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

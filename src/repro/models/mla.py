@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (MLA, DeepSeek-V2 / MiniCPM3).
+
+Queries and keys/values are low-rank compressed; the decode KV cache stores
+only the (kv_lora_rank + qk_rope) latent per token — ~16x smaller than the
+equivalent dense GQA cache, which is what makes the long_500k decode cell
+cheap.  Decode uses the absorbed formulation (q projected into latent space,
+attention runs entirely over the compressed cache); prefill/train materialize
+per-head K/V for MXU-friendly blockwise attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (_init_dense, chunked_attention, rmsnorm,
+                                 rmsnorm_init, rope)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+    rope_theta: float = 10000.0
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 8)
+    d, H = cfg.d_model, cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": _init_dense(ks[0], d, r_q, dtype),
+        "q_norm": rmsnorm_init(r_q),
+        "w_uq": _init_dense(ks[1], r_q, H * (dn + dr), dtype),
+        "w_dkv": _init_dense(ks[2], d, r_kv, dtype),
+        "kv_norm": rmsnorm_init(r_kv),
+        "w_uk": _init_dense(ks[3], r_kv, H * dn, dtype),
+        "w_uv": _init_dense(ks[4], r_kv, H * dv, dtype),
+        "w_kr": _init_dense(ks[5], d, dr, dtype),
+        "w_o": _init_dense(ks[6], H * dv, d, dtype),
+    }
+
+
+def mla_latents(params, cfg: MLAConfig, x, positions):
+    """Compressed KV latents for caching: (c_kv (B,L,r), k_rope (B,L,dr))."""
+    c_kv = rmsnorm(params["kv_norm"], x @ params["w_dkv"])
+    k_r = rope(x @ params["w_kr"], positions, cfg.rope_theta)
+    return c_kv, k_r
+
+
+def _queries(params, cfg: MLAConfig, x, positions):
+    B, L, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    c_q = rmsnorm(params["q_norm"], x @ params["w_dq"])
+    q = (c_q @ params["w_uq"]).reshape(B, L, H, dn + dr)
+    q_n, q_r = q[..., :dn], q[..., dn:]
+    q_r = rope(jnp.moveaxis(q_r, 1, 2), positions[:, None, :], cfg.rope_theta)
+    return jnp.moveaxis(q_n, 1, 2), q_r      # (B, H, L, dn), (B, H, L, dr)
+
+
+def mla_attend_prefill(params, cfg: MLAConfig, x, positions, *, causal=True,
+                       chunk_q=1024, chunk_k=1024, flash_bwd=False):
+    """Materialized path for train/prefill. Returns (out, (c_kv, k_rope))."""
+    B, L, _ = x.shape
+    H, dn, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    q_n, q_r = _queries(params, cfg, x, positions)
+    c_kv, k_r = mla_latents(params, cfg, x, positions)
+    k_n = jnp.moveaxis((c_kv @ params["w_uk"]).reshape(B, L, H, dn), 1, 2)
+    v = jnp.moveaxis((c_kv @ params["w_uv"]).reshape(B, L, H, dv), 1, 2)
+    # concat nope+rope per head; shared k_rope broadcast across heads
+    q = jnp.concatenate([q_n, q_r], axis=-1)
+    k = jnp.concatenate(
+        [k_n, jnp.broadcast_to(k_r[:, None], (B, H, L, cfg.qk_rope_dim))],
+        axis=-1)
+    # pad v to q/k head_dim so one attention call handles both (slice after)
+    o = chunked_attention(q, k, jnp.pad(v, ((0, 0),) * 3 + ((0, q.shape[-1] - dv),)),
+                          causal=causal, chunk_q=chunk_q, chunk_k=chunk_k,
+                          flash_bwd=flash_bwd)
+    o = o[..., :dv]
+    o = jnp.moveaxis(o, 1, 2).reshape(B, L, H * dv)
+    return o @ params["w_o"], (c_kv, k_r)
+
+
+def mla_attend_decode(params, cfg: MLAConfig, x, positions, cache, length,
+                      prewritten: bool = False, seq_axis=None):
+    """Absorbed decode: x (B, 1, d) against latent cache.
+
+    cache: (c_kv (B, S, r), k_rope (B, S, dr)); length: (B,) valid entries.
+    Returns (out (B, 1, d), (c_kv_new (B,1,r), k_rope_new (B,1,dr))).
+
+    prewritten=True: the caller already wrote this step's latents into the
+    cache (write-then-attend; ``length`` includes them) — no concat, so the
+    cache keeps its power-of-two S and stays evenly sequence-sharded.
+    """
+    B = x.shape[0]
+    H, dn, dr, dv, r = (cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                        cfg.v_head_dim, cfg.kv_lora_rank)
+    c_cache, kr_cache = cache              # (B, S, r), (B, S, dr)
+    S = c_cache.shape[1]
+    q_n, q_r = _queries(params, cfg, x, positions)   # (B,H,1,dn),(B,H,1,dr)
+    # absorb W_uk into the query: q_c[h] = q_n[h] @ W_uk[h]^T  -> latent space
+    w_uk = params["w_uk"].reshape(r, H, dn)
+    q_c = jnp.einsum("bhd,rhd->bhr", q_n[:, :, 0], w_uk)       # (B, H, r)
+    if prewritten:
+        c_new, kr_new = None, None
+        c_all, kr_all = c_cache, kr_cache
+        S_eff = S
+    else:
+        # this step's own latent — appended virtually so the token attends
+        # to itself without a prior cache write
+        c_new, kr_new = mla_latents(params, cfg, x, positions)  # (B,1,r/dr)
+        c_all = jnp.concatenate([c_cache, c_new], axis=1)       # (B, S+1, r)
+        kr_all = jnp.concatenate([kr_cache, kr_new], axis=1)
+        S_eff = S + 1
+    if isinstance(seq_axis, str) and "," in seq_axis:
+        seq_axis = tuple(seq_axis.split(","))
+    if seq_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        q_c = jax.lax.with_sharding_constraint(q_c, P())
+    scale = 1.0 / jnp.sqrt(jnp.float32(dn + dr))
+    s = (jnp.einsum("bhr,bsr->bhs", q_c, c_all,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhd,bsd->bhs", q_r[:, :, 0], kr_all,
+                      preferred_element_type=jnp.float32)) * scale
+    if seq_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        s = jax.lax.with_sharding_constraint(s, P(None, None, seq_axis))
+    idx = jnp.arange(S_eff)[None, None, :]
+    mask = (idx < length[:, None, None])
+    if not prewritten:
+        mask = mask | (idx == S)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhs,bsr->bhr", p.astype(c_all.dtype), c_all,
+                     preferred_element_type=jnp.float32)       # (B, H, r)
+    w_uv = params["w_uv"].reshape(r, H, dv)
+    o = jnp.einsum("bhr,rhd->bhd", o_c.astype(x.dtype), w_uv)
+    o = o.reshape(B, 1, H * dv)
+    return o @ params["w_o"], (c_new, kr_new)

@@ -1,0 +1,410 @@
+"""Config-driven decoder-only LM covering the five assigned architectures:
+dense GQA (+ optional qk-norm), MLA, and MoE (+ shared experts) variants.
+
+Layers are stacked (leading ``n_layers`` axis) and applied with
+``jax.lax.scan`` so 64-layer models compile as one layer body; activation
+rematerialization is a config flag.  Three entry points:
+
+  train_step_loss(params, batch)                -> scalar loss
+  prefill(params, tokens)                       -> (logits_last, caches)
+  decode_step(params, token, caches, length)    -> (logits, updated caches)
+
+Caches are fixed-capacity; decode writes the step's K/V (or MLA latents) at
+position ``length``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    attn_type: str = "gqa"              # gqa | mla
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    moe: Optional[MOE.MoEConfig] = None
+    mla: Optional[MLA.MLAConfig] = None
+    dtype: str = "bfloat16"
+    remat: bool = True
+    chunk_q: int = 1024
+    chunk_k: int = 1024
+    # perf knobs (EXPERIMENTS.md §Perf):
+    # wire_barrier: optimization_barrier after each block's output dot so
+    # XLA cannot hoist the f32 convert above the TP partial-sum all-reduce
+    # (keeps the wire at bf16 — measured 2x collective-bytes otherwise).
+    wire_barrier: bool = False
+    # act_shard: Megatron-style sequence parallelism for the residual
+    # stream — layer-boundary activations (and hence the remat-saved
+    # residuals) are sharded over the model axis on the sequence dim;
+    # GSPMD turns the TP all-reduce into reduce-scatter + all-gather.
+    act_shard: bool = False
+    act_batch_axes: tuple = ()          # set by the launcher per mesh
+    # flash_bwd: custom-VJP chunked attention (FA-2 backward schedule) —
+    # O(L) residuals instead of autodiff's O(L^2) tile stacks.
+    flash_bwd: bool = False
+    # decode_seq_axis: force the flash-decoding schedule (q replicated,
+    # cache sequence-sharded over this mesh axis) in decode attention.
+    decode_seq_axis: Optional[str] = None
+    # decode_write_then_attend: write the step's K/V into the fixed cache
+    # BEFORE attention (no concat to S+1 -> cache stays evenly sharded).
+    decode_write_then_attend: bool = False
+    # fsdp_inner: all-gather FSDP-sharded layer weights INSIDE the layer
+    # scan body (per layer) instead of the whole stack at step start —
+    # peak weight memory drops n_layers-fold; grad transpose becomes a
+    # per-layer reduce-scatter.  Requires a mesh context (launcher sets
+    # model_axis_size for the divisibility guard).
+    fsdp_inner: bool = False
+    model_axis_size: int = 0
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def attn_cfg(self) -> L.AttnConfig:
+        return L.AttnConfig(self.d_model, self.n_heads, self.n_kv_heads,
+                            self.head_dim, self.qk_norm, self.rope_theta)
+
+    def n_params(self) -> int:
+        """Total parameter count (for MODEL_FLOPS bookkeeping)."""
+        d, H, Hkv, Dh = self.d_model, self.n_heads, self.n_kv_heads, self.head_dim
+        if self.attn_type == "mla":
+            m = self.mla
+            attn = (d * m.q_lora_rank
+                    + m.q_lora_rank * H * (m.qk_nope_dim + m.qk_rope_dim)
+                    + d * m.kv_lora_rank + d * m.qk_rope_dim
+                    + m.kv_lora_rank * H * (m.qk_nope_dim + m.v_head_dim)
+                    + H * m.v_head_dim * d)
+        else:
+            attn = d * H * Dh + 2 * d * Hkv * Dh + H * Dh * d
+        if self.moe:
+            E = self.moe.n_experts
+            ffn = E * 3 * d * self.moe.d_ff_expert + d * E
+            if self.moe.n_shared:
+                d_sh = self.moe.d_ff_shared or self.moe.d_ff_expert * self.moe.n_shared
+                ffn += 3 * d * d_sh
+        else:
+            ffn = 3 * d * self.d_ff
+        return self.n_layers * (attn + ffn + 2 * d) + self.vocab * d + d
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.n_params()
+        d = self.d_model
+        full = self.n_params()
+        E, k = self.moe.n_experts, self.moe.top_k
+        expert_p = 3 * d * self.moe.d_ff_expert
+        return full - self.n_layers * (E - k) * expert_p
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: TransformerConfig):
+    dt = cfg.jdtype
+    k_emb, k_layers, k_final = jax.random.split(key, 3)
+
+    def layer_init(k):
+        ka, kf = jax.random.split(k)
+        p = {"ln1": L.rmsnorm_init(cfg.d_model),
+             "ln2": L.rmsnorm_init(cfg.d_model)}
+        if cfg.attn_type == "mla":
+            p["attn"] = MLA.mla_init(ka, cfg.mla, dt)
+        else:
+            p["attn"] = L.gqa_init(ka, cfg.attn_cfg(), dt)
+        if cfg.moe:
+            p["ffn"] = MOE.moe_init(kf, cfg.d_model, cfg.moe, dt)
+        else:
+            p["ffn"] = L.swiglu_init(kf, cfg.d_model, cfg.d_ff, dt)
+        return p
+
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(layer_init)(layer_keys)
+    return {
+        "embed": L.embedding_init(k_emb, cfg.vocab, cfg.d_model, dt),
+        "layers": stacked,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+
+
+# --------------------------------------------------------------------------
+# forward (scan over stacked layers)
+# --------------------------------------------------------------------------
+
+def _barrier(cfg, h):
+    return jax.lax.optimization_barrier(h) if cfg.wire_barrier else h
+
+
+def _shard_act(cfg: TransformerConfig, x):
+    """Sequence-parallel residual stream (requires a mesh context)."""
+    if not cfg.act_shard:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(cfg.act_batch_axes or None, "model", None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _constrain_layer_tp(cfg: TransformerConfig, lp):
+    """Per-layer FSDP gather: force each (sliced) layer param to its pure-TP
+    compute layout; the data-axis dim all-gathers here, per layer."""
+    if not cfg.fsdp_inner:
+        return lp
+    from jax.sharding import PartitionSpec as P
+    ms = cfg.model_axis_size or 1
+
+    def one(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        nd = leaf.ndim
+        down = ("w_down" in ps) or ("wo" in ps)
+        if nd == 3 and leaf.shape[0] % ms == 0:        # (E, d, f) experts
+            spec = P("model", None, None)
+        elif nd == 2 and "router" not in ps:
+            if down and leaf.shape[0] % ms == 0:
+                spec = P("model", None)
+            elif not down and leaf.shape[1] % ms == 0:
+                spec = P(None, "model")
+            else:
+                spec = P()
+        else:
+            spec = P()
+        return jax.lax.with_sharding_constraint(leaf, spec)
+
+    return jax.tree_util.tree_map_with_path(one, lp)
+
+
+def _layer_fwd(cfg: TransformerConfig, lp, x, positions, aux):
+    lp = _constrain_layer_tp(cfg, lp)
+    h, _ = (_attend(cfg, lp, L.rmsnorm(lp["ln1"], x), positions))
+    x = _shard_act(cfg, x + _barrier(cfg, h))
+    if cfg.moe:
+        B, Lq, d = x.shape
+        y, a = MOE.moe_apply(lp["ffn"], cfg.moe,
+                             L.rmsnorm(lp["ln2"], x).reshape(B * Lq, d))
+        x = x + _barrier(cfg, y.reshape(B, Lq, d))
+        aux = aux + a
+    else:
+        x = x + _barrier(cfg, L.swiglu(lp["ffn"], L.rmsnorm(lp["ln2"], x)))
+    return _shard_act(cfg, x), aux
+
+
+def _attend(cfg, lp, xn, positions, kv_cache=None, cache_length=None):
+    if cfg.attn_type == "mla":
+        if kv_cache is not None and xn.shape[1] == 1:
+            return MLA.mla_attend_decode(lp["attn"], cfg.mla, xn, positions,
+                                         kv_cache, cache_length)
+        return MLA.mla_attend_prefill(lp["attn"], cfg.mla, xn, positions,
+                                      chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k,
+                                      flash_bwd=cfg.flash_bwd)
+    return L.gqa_attend(lp["attn"], cfg.attn_cfg(), xn, positions,
+                        kv_cache=kv_cache, cache_length=cache_length,
+                        chunk_q=cfg.chunk_q, chunk_k=cfg.chunk_k,
+                        flash_bwd=cfg.flash_bwd,
+                        decode_seq_axis=cfg.decode_seq_axis)
+
+
+def forward(params, cfg: TransformerConfig, tokens):
+    """tokens (B, L) -> logits (B, L, vocab), aux loss."""
+    B, Lq = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(Lq)[None], (B, Lq))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, aux = _layer_fwd(cfg, lp, x, positions, aux)
+        return (x, aux), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                               params["layers"])
+    x = L.rmsnorm(params["final_norm"], x)
+    return L.unembed(params["embed"], x), aux
+
+
+def train_step_loss(params, cfg: TransformerConfig, batch):
+    logits, aux = forward(params, cfg, batch["tokens"])
+    return L.cross_entropy(logits, batch["labels"]) + aux
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def make_empty_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    dt = cfg.jdtype
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros((cfg.n_layers, batch, max_len, m.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((cfg.n_layers, batch, max_len, m.qk_rope_dim), dt),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len,
+                        cfg.head_dim), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len,
+                        cfg.head_dim), dt),
+    }
+
+
+def prefill(params, cfg: TransformerConfig, tokens):
+    """tokens (B, L) -> (last-position logits (B, vocab), caches filled to L).
+
+    Caches are returned at exactly length L; the serve loop re-homes them into
+    its fixed-capacity buffers.
+    """
+    B, Lq = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(Lq)[None], (B, Lq))
+
+    def body(x, lp):
+        h, kv = _attend(cfg, lp, L.rmsnorm(lp["ln1"], x), positions)
+        x = x + h
+        if cfg.moe:
+            Bq, Lq2, d = x.shape
+            y, _ = MOE.moe_apply(lp["ffn"], cfg.moe,
+                                 L.rmsnorm(lp["ln2"], x).reshape(Bq * Lq2, d))
+            x = x + y.reshape(Bq, Lq2, d)
+        else:
+            x = x + L.swiglu(lp["ffn"], L.rmsnorm(lp["ln2"], x))
+        return x, kv
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, caches = jax.lax.scan(body_fn, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x[:, -1:])
+    logits = L.unembed(params["embed"], x)[:, 0]
+    if cfg.attn_type == "mla":
+        cache = {"c_kv": caches[0], "k_rope": caches[1]}
+    else:
+        cache = {"k": caches[0], "v": caches[1]}
+    return logits, cache
+
+
+def decode_step(params, cfg: TransformerConfig, token, cache, length):
+    """token (B,) int32; cache dict of (n_layers, ...); length (B,) current
+    valid cache entries. Returns (logits (B, vocab), updated cache)."""
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None])
+    positions = length[:, None]
+
+    cache_keys = list(cache.keys())
+
+    def body_write_then_attend(x, scanned):
+        """Sharding-friendly decode: write this step's K/V (or latents)
+        into the fixed cache FIRST, then attend over the unmodified-shape
+        cache.  A concat to S+1 slots makes S odd and unshardable — GSPMD
+        then all-gathers the whole cache per layer (60GB/step measured on
+        qwen3-1.7b decode_32k)."""
+        lp, layer_cache = scanned
+        lp = _constrain_layer_tp(cfg, lp)
+        xn = L.rmsnorm(lp["ln1"], x)
+        from jax.sharding import PartitionSpec as P
+        rep = (lambda t: jax.lax.with_sharding_constraint(t, P())) \
+            if cfg.decode_seq_axis is not None else (lambda t: t)
+        if cfg.attn_type == "mla":
+            c_new, kr_new = MLA.mla_latents(lp["attn"], cfg.mla, xn,
+                                            positions)
+            c_new = rep(c_new)
+            kr_new = rep(kr_new)
+            c_kv = _write_at(layer_cache["c_kv"], c_new[:, 0], length, 1)
+            k_rope = _write_at(layer_cache["k_rope"], kr_new[:, 0], length, 1)
+            h, _ = MLA.mla_attend_decode(
+                lp["attn"], cfg.mla, xn, positions, (c_kv, k_rope),
+                length + 1, prewritten=True, seq_axis=cfg.decode_seq_axis)
+            upd = {"c_kv": c_kv, "k_rope": k_rope}
+        else:
+            acfg = cfg.attn_cfg()
+            q, k, v = L.gqa_project_qkv(lp["attn"], acfg, xn, positions)
+            k = rep(k)
+            v = rep(v)
+            ck = _write_at(layer_cache["k"], k[:, :, 0], length, 2)
+            cv = _write_at(layer_cache["v"], v[:, :, 0], length, 2)
+            o = L.decode_attention(q, ck, cv, length=length + 1,
+                                   seq_axis=cfg.decode_seq_axis,
+                                   extra_slot=False)
+            o = jnp.moveaxis(o, 1, 2).reshape(
+                x.shape[0], 1, acfg.n_heads * acfg.head_dim)
+            h = o @ lp["attn"]["wo"]
+            upd = {"k": ck, "v": cv}
+        x = x + h
+        if cfg.moe:
+            y, _ = MOE.moe_apply(lp["ffn"], cfg.moe,
+                                 L.rmsnorm(lp["ln2"], x).reshape(B, -1))
+            x = x + y.reshape(B, 1, -1)
+        else:
+            x = x + L.swiglu(lp["ffn"], L.rmsnorm(lp["ln2"], x))
+        return x, upd
+
+    def body(x, scanned):
+        lp, layer_cache = scanned
+        if cfg.attn_type == "mla":
+            kvc = (layer_cache["c_kv"], layer_cache["k_rope"])
+        else:
+            kvc = (layer_cache["k"], layer_cache["v"])
+        h, new = _attend(cfg, lp, L.rmsnorm(lp["ln1"], x), positions,
+                         kv_cache=kvc, cache_length=length)
+        x = x + h
+        if cfg.moe:
+            y, _ = MOE.moe_apply(lp["ffn"], cfg.moe,
+                                 L.rmsnorm(lp["ln2"], x).reshape(B, -1))
+            x = x + y.reshape(B, 1, -1)
+        else:
+            x = x + L.swiglu(lp["ffn"], L.rmsnorm(lp["ln2"], x))
+        # write this step's kv/latents at position `length` per batch row.
+        # The one-token update is REPLICATED first when the cache sequence
+        # dim is sharded: its natural (head x Dh) TP sharding would
+        # otherwise make GSPMD reshard the entire cache around the write
+        # ('involuntary full rematerialization', 60GB/step measured).
+        upd = {}
+        for key, new_v in zip(cache_keys, new):
+            buf = layer_cache[key]
+            if cfg.decode_seq_axis is not None:
+                from jax.sharding import PartitionSpec as P
+                new_v = jax.lax.with_sharding_constraint(new_v, P())
+            if cfg.attn_type == "mla":
+                # (B, 1, r) -> write at [b, length[b]]
+                upd[key] = _write_at(buf, new_v[:, 0], length, axis=1)
+            else:
+                # (B, Hkv, 1, Dh) -> write at [b, :, length[b]]
+                upd[key] = _write_at(buf, new_v[:, :, 0], length, axis=2)
+        return x, upd
+
+    body_fn = (body_write_then_attend if cfg.decode_write_then_attend
+               else body)
+    x, new_cache = jax.lax.scan(body_fn, x, (params["layers"], cache))
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.unembed(params["embed"], x)[:, 0]
+    return logits, new_cache
+
+
+def _write_at(buf, val, length, axis: int):
+    """Write val (B, ...) into buf (B, ..., S, ...) at index length[b].
+
+    Implemented as a one-hot mask select rather than a vmapped
+    dynamic-update-slice: the batched scatter that vmap produces defeats
+    GSPMD's sequence-dim partitioning of the cache (measured: a full f32
+    cache all-gather per layer, 60GB/decode-step); the select keeps every
+    shard local — each shard only commits the position it owns."""
+    S = buf.shape[axis]
+    idx = jnp.clip(length, 0, S - 1)
+    shape = [1] * buf.ndim
+    shape[axis] = S
+    pos = jnp.arange(S).reshape(shape)                   # (1,..,S,..,1)
+    sel = pos == idx.reshape((-1,) + (1,) * (buf.ndim - 1))
+    val = jnp.expand_dims(val, axis)                     # (B, ..., 1, ...)
+    return jnp.where(sel, val.astype(buf.dtype), buf)

@@ -1,0 +1,130 @@
+"""Batched serving loop: continuous-batching-lite over fixed-capacity slots.
+
+The engine holds ``batch`` request slots, each with a fixed-capacity KV (or
+MLA latent) cache.  ``submit`` prefills a prompt into a free slot;
+``step_all`` advances every active slot one token (one jitted decode_step for
+the whole batch — requests are batched at the step level, the vLLM-style
+throughput pattern without paging).  Finished slots (EOS or max_tokens) free
+immediately and can be re-filled between steps — arrival/departure never
+recompiles because shapes are static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as TF
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray
+    max_new_tokens: int = 32
+    eos_id: int = -1             # -1: never stops early
+    out_tokens: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: TF.TransformerConfig, batch: int,
+                 max_len: int, greedy: bool = True, seed: int = 0):
+        self.params, self.cfg = params, cfg
+        self.batch, self.max_len = batch, max_len
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = TF.make_empty_cache(cfg, batch, max_len)
+        self.length = jnp.zeros((batch,), jnp.int32)
+        self.cur_token = jnp.zeros((batch,), jnp.int32)
+        self.active: list[Optional[Request]] = [None] * batch
+        self.budget = np.zeros(batch, np.int64)
+
+        self._prefill = jax.jit(lambda p, t: TF.prefill(p, cfg, t))
+        self._decode = jax.jit(lambda p, tok, cache, ln:
+                               TF.decode_step(p, cfg, tok, cache, ln))
+
+    # -- slot management ----------------------------------------------------
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def submit(self, req: Request) -> bool:
+        """Prefill ``req`` into a free slot; False if engine is full."""
+        slots = self.free_slots()
+        if not slots:
+            return False
+        slot = slots[0]
+        L = len(req.prompt)
+        logits, kv = self._prefill(self.params,
+                                   jnp.asarray(req.prompt, jnp.int32)[None])
+        # write the prefill caches into the slot's fixed-capacity buffers
+        for k, v in kv.items():
+            buf = self.cache[k]
+            if self.cfg.attn_type == "mla":      # (layers, 1, L, r)
+                upd = v[:, 0]
+                buf = jax.lax.dynamic_update_slice(
+                    buf, upd[:, None].astype(buf.dtype),
+                    (0, slot, 0, 0))
+            else:                                # (layers, 1, Hkv, L, Dh)
+                upd = v[:, 0]
+                buf = jax.lax.dynamic_update_slice(
+                    buf, upd[:, None].astype(buf.dtype),
+                    (0, slot, 0, 0, 0))
+            self.cache[k] = buf
+        tok = int(jnp.argmax(logits[0])) if self.greedy else \
+            int(jax.random.categorical(self._next_key(), logits[0]))
+        req.out_tokens.append(tok)
+        req.slot = slot
+        self.active[slot] = req
+        self.length = self.length.at[slot].set(L)
+        self.cur_token = self.cur_token.at[slot].set(tok)
+        self.budget[slot] = req.max_new_tokens - 1
+        return True
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    # -- decode -------------------------------------------------------------
+
+    def step_all(self) -> int:
+        """One batched decode step for all active slots; returns #finished."""
+        if all(r is None for r in self.active):
+            return 0
+        logits, self.cache = self._decode(self.params, self.cur_token,
+                                          self.cache, self.length)
+        if self.greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(self._next_key(), logits).astype(jnp.int32)
+        self.length = jnp.minimum(self.length + 1, self.max_len - 1)
+        self.cur_token = nxt
+        nxt_np = np.asarray(nxt)
+        n_done = 0
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt_np[i])
+            req.out_tokens.append(tok)
+            self.budget[i] -= 1
+            if self.budget[i] <= 0 or tok == req.eos_id:
+                req.done = True
+                self.active[i] = None
+                n_done += 1
+        return n_done
+
+    def run(self, requests: list[Request], max_steps: int = 10_000):
+        """Serve a request list to completion with continuous batching."""
+        pending = list(requests)
+        steps = 0
+        while (pending or any(r is not None for r in self.active)) \
+                and steps < max_steps:
+            while pending and self.free_slots():
+                self.submit(pending.pop(0))
+            self.step_all()
+            steps += 1
+        return requests

@@ -1,0 +1,167 @@
+"""Fault-tolerant checkpointing: sharded-safe npz snapshots with atomic
+rename, an async background writer, and **elastic restore** (a checkpoint
+saved on one mesh restores onto any other — arrays are saved fully-replicated
+logical values; the restoring launcher re-applies its own shardings).
+
+Layout:
+  <dir>/step_<N>/arrays.npz      flattened pytree leaves (key = path string)
+  <dir>/step_<N>/meta.json       step, tree structure, data-iterator state, rng
+  <dir>/LATEST                   text file with the newest complete step dir
+
+Crash safety: writes go to ``step_<N>.tmp`` and are renamed only when fsynced
+and complete, so a killed writer never corrupts LATEST.  Old steps are
+garbage-collected keeping ``keep`` newest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
+         keep: int = 3) -> str:
+    """Synchronous checkpoint write. Returns the final step directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves = _flatten_with_paths(tree)
+    # device -> host; works for sharded arrays (gathers the logical value)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in leaves.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **host)
+    meta = {"step": int(step), "keys": sorted(host.keys()),
+            "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):                  # same step re-saved
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic commit
+    _update_latest(ckpt_dir, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _update_latest(ckpt_dir: str, final: str) -> None:
+    latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step_dir(ckpt_dir: str) -> Optional[str]:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        name = f.read().strip()
+    full = os.path.join(ckpt_dir, name)
+    return full if os.path.isdir(full) else None
+
+
+def restore(ckpt_dir: str, like: Any, shardings: Any = None):
+    """Restore the newest checkpoint into the structure of ``like``.
+
+    Elastic: ``shardings`` (same pytree structure, or None) re-shards each
+    leaf onto the *current* mesh regardless of the saving mesh — the npz
+    holds full logical arrays.  Returns (tree, step, extra) or None.
+    """
+    d = latest_step_dir(ckpt_dir)
+    if d is None:
+        return None
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat, tdef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(flat))
+    for (path, leaf), sh in zip(flat, shard_leaves):
+        key = jax.tree_util.keystr(path)
+        arr = data[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"{key}: ckpt shape {arr.shape} != {leaf.shape}")
+        if sh is not None:
+            out.append(jax.device_put(arr.astype(leaf.dtype), sh))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(tdef, out)
+    return tree, meta["step"], meta.get("extra", {})
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint writes with training (single in-flight snapshot).
+
+    ``save`` blocks only for device->host transfer of the leaves (cheap,
+    overlappable with the next step's compute on device) and hands the file
+    I/O to a daemon thread.  A second save while one is in flight waits —
+    backpressure instead of unbounded host memory growth.
+    """
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._err: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()
+        host = {k: np.asarray(jax.device_get(v))
+                for k, v in _flatten_with_paths(tree).items()}
+
+        def _write():
+            try:
+                final = os.path.join(self.ckpt_dir, f"step_{step:08d}")
+                tmp = final + ".tmp"
+                os.makedirs(self.ckpt_dir, exist_ok=True)
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                os.makedirs(tmp)
+                np.savez(os.path.join(tmp, "arrays.npz"), **host)
+                with open(os.path.join(tmp, "meta.json"), "w") as f:
+                    json.dump({"step": int(step),
+                               "keys": sorted(host.keys()),
+                               "extra": extra or {}}, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                _update_latest(self.ckpt_dir, final)
+                _gc(self.ckpt_dir, self.keep)
+            except BaseException as e:   # surfaced at next save()/wait()
+                self._err = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()

@@ -1,0 +1,50 @@
+"""Elastic scaling: resume a run on a different mesh than it was saved from.
+
+The checkpoint format (training/checkpoint.py) stores full logical arrays, so
+elasticity reduces to re-computing shardings for the new mesh and
+device_put-ing on restore.  This module provides the glue:
+
+  * ``reshard_tree(tree, mesh, rules)`` — apply logical-axis rules
+    (launch/sharding.py) to every leaf for the *current* mesh.
+  * ``elastic_restore(ckpt_dir, like, mesh, rules)`` — restore + reshard in
+    one call; mesh shape changes (e.g. 256 -> 128 chips after losing a pod
+    slice, or 256 -> 512 after scale-up) need no checkpoint conversion.
+
+Batch-size elasticity: global batch is ``per_device_batch * data_axis``; the
+launcher recomputes per-device batch on restart, and the counter-based data
+stream (data/pipeline.py) is batch-size-agnostic, so scaling the data axis
+only changes throughput, not the sample sequence semantics.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.training import checkpoint as ckpt
+
+
+def sharding_tree(tree: Any, mesh: Mesh, rules) -> Any:
+    """NamedSharding for every leaf via ``rules(path, leaf) -> PartitionSpec``."""
+    flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        spec = rules(jax.tree_util.keystr(path), leaf)
+        out.append(NamedSharding(mesh, spec if spec is not None else P()))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def reshard_tree(tree: Any, mesh: Mesh, rules) -> Any:
+    sh = sharding_tree(tree, mesh, rules)
+    return jax.tree.map(jax.device_put, tree, sh)
+
+
+def elastic_restore(ckpt_dir: str, like: Any, mesh: Optional[Mesh] = None,
+                    rules=None):
+    """Restore LATEST onto the current mesh. Returns (tree, step, extra) or
+    None. With mesh/rules None, restores replicated (single-process runs)."""
+    shardings = None
+    if mesh is not None and rules is not None:
+        shardings = sharding_tree(like, mesh, rules)
+    return ckpt.restore(ckpt_dir, like, shardings)

@@ -1,0 +1,159 @@
+"""The paper's algorithms: correctness, termination, quality, and the
+claimed RSOC-vs-CAT behaviour (fewer gather passes, same color quality).
+Includes hypothesis property tests over random graphs."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coloring as col
+from repro.core.frontier import color_rsoc_compact
+from repro.core.distance2 import color_distance_d, is_distance_d_proper
+from repro.graphs import generators as gen
+from repro.graphs.csr import CSRGraph, from_edges, power_graph
+
+
+GRAPHS = {
+    "mesh2d": gen.mesh2d(32, 32),
+    "mesh3d": gen.mesh3d(8, 8, 8),
+    "rmat_b": gen.rmat_b(10, edge_factor=8),
+    "er": gen.erdos_renyi(2000, 8.0),
+}
+ALGOS = ["gm", "cat", "rsoc"]
+
+
+# --------------------------------------------------------------------------
+# correctness: proper colorings, all algorithms, all graph classes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("algo", ALGOS + ["jp"])
+def test_proper_coloring(gname, algo):
+    g = GRAPHS[gname]
+    res = col.ALGORITHMS[algo](g, seed=1)
+    assert col.is_proper(g, res.colors), f"{algo} defective on {gname}"
+    assert res.n_colors <= g.max_degree + 1      # greedy bound
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_serial_oracle_proper(gname):
+    g = GRAPHS[gname]
+    colors = col.greedy_sequential(g)
+    assert col.is_proper(g, colors)
+    assert col.n_colors_used(colors) <= g.max_degree + 1
+
+
+# --------------------------------------------------------------------------
+# paper claims
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_rsoc_quality_matches_cat(gname):
+    """Paper: both algorithms produce colorings with about the same number
+    of colors, near the serial greedy level (<= +20% tolerance band)."""
+    g = GRAPHS[gname]
+    serial = col.n_colors_used(col.greedy_sequential(g))
+    r = col.color_rsoc(g, seed=2).n_colors
+    c = col.color_cat(g, seed=2).n_colors
+    assert r <= max(serial * 1.25 + 2, c * 1.25 + 2)
+    assert c <= serial * 1.25 + 2
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_rsoc_fewer_gather_passes(gname):
+    """The structural speedup: RSOC does ~half the neighbor-gather sweeps
+    (1/round vs CAT's 2/round) and never more rounds (paper Figs 5-6)."""
+    g = GRAPHS[gname]
+    r = col.color_rsoc(g, seed=3)
+    c = col.color_cat(g, seed=3)
+    assert r.gather_passes < c.gather_passes
+    assert r.n_rounds <= c.n_rounds + 1
+
+
+def test_lockstep_termination():
+    """Paper §5: fully-lockstep execution (n_chunks=1, every vertex in one
+    simultaneous wave) livelocks WITHOUT asymmetric tie-breaking; our hashed
+    priority guarantees termination.  The 2-vertex example of Fig. 7."""
+    g = from_edges(2, np.array([[0, 1]]))
+    res = col.color_rsoc(g, seed=0, n_chunks=1, max_rounds=50)
+    assert col.is_proper(g, res.colors)
+    assert res.n_rounds < 10
+    # and a dense lockstep case
+    g2 = gen.erdos_renyi(256, 16.0, seed=5)
+    res2 = col.color_rsoc(g2, seed=0, n_chunks=1, max_rounds=200)
+    assert col.is_proper(g2, res2.colors)
+
+
+def test_conflicts_decrease_with_chunks():
+    """More sequential chunks = fresher data = fewer conflicts (the paper's
+    freshness argument, recovered deterministically)."""
+    g = GRAPHS["rmat_b"]
+    lockstep = col.color_rsoc(g, seed=4, n_chunks=1)
+    chunked = col.color_rsoc(g, seed=4, n_chunks=32)
+    assert chunked.total_conflicts <= lockstep.total_conflicts
+
+
+# --------------------------------------------------------------------------
+# frontier compaction + distance-2
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_frontier_compact_proper(gname):
+    g = GRAPHS[gname]
+    res = color_rsoc_compact(g, seed=5)
+    assert col.is_proper(g, res.colors)
+
+
+def test_distance2_coloring():
+    g = gen.mesh2d(16, 16)
+    res, gd = color_distance_d(g, d=2, algorithm="rsoc", seed=0)
+    assert is_distance_d_proper(g, res.colors, 2)
+    # G^2 is denser; needs at least as many colors as G
+    res1 = col.color_rsoc(g, seed=0)
+    assert res.n_colors >= res1.n_colors
+
+
+# --------------------------------------------------------------------------
+# hypothesis property tests
+# --------------------------------------------------------------------------
+
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(2, 120))
+    m = draw(st.integers(0, 4 * n))
+    edges = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=m, max_size=m))
+    return from_edges(n, np.array(edges, dtype=np.int64).reshape(-1, 2))
+
+
+@given(random_graph(), st.sampled_from(ALGOS), st.integers(0, 3),
+       st.sampled_from([1, 2, 16]))
+@settings(max_examples=40, deadline=None)
+def test_property_proper_and_bounded(g, algo, seed, n_chunks):
+    """Invariant: any algorithm, any seed, any chunking -> proper coloring
+    with <= max_degree+1 colors, terminating."""
+    kw = {} if algo == "jp" else {"n_chunks": n_chunks}
+    res = col.ALGORITHMS[algo](g, seed=seed, **kw)
+    assert col.is_proper(g, res.colors)
+    assert res.n_colors <= g.max_degree + 1
+
+
+@given(random_graph(), st.integers(0, 2))
+@settings(max_examples=20, deadline=None)
+def test_property_power_graph_contains_base(g, seed):
+    """G^2 proper coloring is also proper on G (power graph ⊇ G)."""
+    gd = power_graph(g, 2)
+    res = col.color_rsoc(gd, seed=seed)
+    assert col.is_proper(g, res.colors)
+
+
+@given(st.integers(2, 40), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_property_complete_graph_needs_n_colors(n, seed):
+    """K_n requires exactly n colors — tests the mex/overflow retry path."""
+    ii, jj = np.meshgrid(np.arange(n), np.arange(n))
+    edges = np.stack([ii[ii != jj], jj[ii != jj]], axis=1)
+    g = from_edges(n, edges)
+    res = col.color_rsoc(g, seed=seed, C=32)
+    assert col.is_proper(g, res.colors)
+    assert res.n_colors == n
