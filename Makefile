@@ -1,0 +1,20 @@
+# CI entry points (see ROADMAP.md "Tier-1 verify" and DESIGN.md §8).
+#
+#   make test         tier-1 test suite (the gate every PR must keep green)
+#   make bench-smoke  tiny-graph run of every benchmark section — catches
+#                     import rot and shape bugs in minutes, not numbers
+#   make bench        paper-scale benchmark run (small suite)
+
+PYTHONPATH := src
+export PYTHONPATH
+
+.PHONY: test bench-smoke bench
+
+test:
+	python -m pytest -x -q
+
+bench-smoke:
+	python -m benchmarks.run --scale=tiny
+
+bench:
+	python -m benchmarks.run --scale=small

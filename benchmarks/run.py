@@ -5,9 +5,13 @@
   colors           color-quality vs serial greedy
   distance2        paper §6 outlook (G^2 density scaling)
   colored_scatter  the technique applied to GNN aggregation
+  incremental      dynamic-graph incremental recoloring vs from-scratch
   lm_step          measured smoke-scale LM train-step wall time
 
-Usage: PYTHONPATH=src python -m benchmarks.run [section ...]
+Usage: PYTHONPATH=src python -m benchmarks.run [--scale=NAME] [section ...]
+
+Unknown section names abort *before* anything runs — a typo must not
+silently skip a benchmark after minutes of earlier sections.
 """
 from __future__ import annotations
 
@@ -16,12 +20,15 @@ import time
 
 
 SECTIONS = ["table1", "conflicts", "colors", "distance2", "colored_scatter",
-            "lm_step"]
+            "incremental", "lm_step"]
+SCALES = ["tiny", "small", "medium"]
 
 
 def lm_step(scale: str = "small") -> None:
     """Wall-time of the real jitted train step at smoke scale (sanity that
-    the training path is healthy; full-scale numbers live in §Roofline)."""
+    the training path is healthy; full-scale numbers live in §Roofline).
+    ``scale='tiny'`` drops to a single architecture so bench-smoke stays
+    fast; the smoke model configs themselves are already minimal."""
     import functools
     import jax
     import jax.numpy as jnp
@@ -32,8 +39,10 @@ def lm_step(scale: str = "small") -> None:
     from repro.training.optimizer import OptimizerConfig, init_opt_state
     from repro.training.train_loop import make_train_step
 
+    archs = ("qwen3-1.7b",) if scale == "tiny" else \
+        ("qwen3-1.7b", "phi3.5-moe-42b-a6.6b")
     csv = Csv(["arch", "ms_per_step", "tokens_per_s", "loss0", "loss_end"])
-    for arch in ("qwen3-1.7b", "phi3.5-moe-42b-a6.6b"):
+    for arch in archs:
         cfg = configs.get(arch).make_smoke()
         params = TF.init_params(jax.random.PRNGKey(0), cfg)
         stream = TokenStream(batch=8, seq_len=64, vocab=cfg.vocab)
@@ -55,30 +64,48 @@ def lm_step(scale: str = "small") -> None:
                 float(m["loss"]))
 
 
+def _section(name: str):
+    if name == "table1":
+        from benchmarks import bench_table1 as b
+    elif name == "conflicts":
+        from benchmarks import bench_conflicts as b
+    elif name == "colors":
+        from benchmarks import bench_colors as b
+    elif name == "distance2":
+        from benchmarks import bench_distance2 as b
+    elif name == "colored_scatter":
+        from benchmarks import bench_colored_scatter as b
+    elif name == "incremental":
+        from benchmarks import bench_incremental as b
+    elif name == "lm_step":
+        return lm_step
+    else:
+        raise AssertionError(name)
+    return b.main
+
+
 def main(argv=None) -> None:
-    args = (argv if argv is not None else sys.argv[1:]) or SECTIONS
-    for name in args:
-        print(f"\n===== bench: {name} =====", flush=True)
-        t0 = time.perf_counter()
-        if name == "table1":
-            from benchmarks import bench_table1 as b
-            b.main()
-        elif name == "conflicts":
-            from benchmarks import bench_conflicts as b
-            b.main()
-        elif name == "colors":
-            from benchmarks import bench_colors as b
-            b.main()
-        elif name == "distance2":
-            from benchmarks import bench_distance2 as b
-            b.main()
-        elif name == "colored_scatter":
-            from benchmarks import bench_colored_scatter as b
-            b.main()
-        elif name == "lm_step":
-            lm_step()
+    args = list(argv if argv is not None else sys.argv[1:])
+    scale = "small"
+    names = []
+    for a in args:
+        if a.startswith("--scale="):
+            scale = a.split("=", 1)[1]
+        elif a == "--scale":
+            raise SystemExit("use --scale=NAME")
         else:
-            raise SystemExit(f"unknown section {name}; known: {SECTIONS}")
+            names.append(a)
+    names = names or SECTIONS
+    # validate everything up front: fail loudly before running any section
+    unknown = [n for n in names if n not in SECTIONS]
+    if unknown:
+        raise SystemExit(f"unknown section(s) {unknown}; known: {SECTIONS}")
+    if scale not in SCALES:
+        raise SystemExit(f"unknown scale {scale!r}; known: {SCALES}")
+    for name in names:
+        print(f"\n===== bench: {name} (scale={scale}) =====", flush=True)
+        t0 = time.perf_counter()
+        _section(name)(scale=scale)
         print(f"===== {name} done in {time.perf_counter() - t0:.1f}s =====",
               flush=True)
 

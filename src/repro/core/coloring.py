@@ -60,14 +60,18 @@ class ColoringResult:
     conflicts_per_round: np.ndarray
     total_conflicts: int
     n_colors: int
-    overflow: bool
+    overflow: bool                 # True iff the color cap was ever exceeded
     gather_passes: int             # neighbor-gather sweeps executed (perf proxy)
+    final_C: int = 0               # color cap actually used (after doublings)
+    retries: int = 0               # cap-doubling re-runs (0 = first cap fit)
 
     def summary(self) -> dict:
         return {"rounds": int(self.n_rounds),
                 "conflicts": int(self.total_conflicts),
                 "colors": int(self.n_colors),
-                "gather_passes": int(self.gather_passes)}
+                "gather_passes": int(self.gather_passes),
+                "final_C": int(self.final_C),
+                "retries": int(self.retries)}
 
 
 def is_proper(g: CSRGraph, colors: np.ndarray) -> bool:
@@ -172,16 +176,29 @@ def _unpermute(colors_new: np.ndarray, perm: np.ndarray, n: int) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 def _forbidden_coo(src, dst, colors, n_rows, C):
-    nbr_c = colors[dst]
-    ok = (nbr_c >= 0) & (nbr_c < C)
+    """COO forbidden sets; FILL (-1) entries in src/dst are dead slots."""
+    live = (src >= 0) & (dst >= 0)
+    nbr_c = colors[jnp.clip(dst, 0, colors.shape[0] - 1)]
+    ok = live & (nbr_c >= 0) & (nbr_c < C)
     forb = jnp.zeros((n_rows, C), jnp.uint8)
-    return forb.at[src, jnp.clip(nbr_c, 0, C - 1)].max(ok.astype(jnp.uint8))
+    return forb.at[jnp.clip(src, 0, n_rows - 1),
+                   jnp.clip(nbr_c, 0, C - 1)].max(ok.astype(jnp.uint8))
 
 
 def _mex(forb):
     mex = jnp.argmin(forb, axis=-1).astype(jnp.int32)
     ovf = jnp.all(forb > 0, axis=-1)
     return mex, ovf
+
+
+def _ovf_conflict(osrc, odst, colors, pri, n_rows):
+    """Per-row defect flags from overflow edges (FILL slots are dead)."""
+    live = (osrc >= 0) & (odst >= 0)
+    s = jnp.clip(osrc, 0, colors.shape[0] - 1)
+    d = jnp.clip(odst, 0, colors.shape[0] - 1)
+    conf = live & (colors[s] == colors[d]) & (colors[s] >= 0) & (pri[d] > pri[s])
+    return jnp.zeros((n_rows,), jnp.uint8).at[jnp.clip(osrc, 0, n_rows - 1)].max(
+        conf.astype(jnp.uint8)).astype(bool)
 
 
 def _gather_nbr(ell_k, colors, pri):
@@ -220,10 +237,7 @@ def _chunked_pass(p_static, ell, osrc, odst, pri, colors, U, force, *,
     # module docstring termination argument.)
     ovf_defect = None
     if has_ovf and detect:
-        conf = ((colors[osrc] == colors[odst]) & (colors[osrc] >= 0)
-                & (pri[odst] > pri[osrc]))
-        ovf_defect = jnp.zeros((n_pad,), jnp.uint8).at[osrc].max(
-            conf.astype(jnp.uint8)).astype(bool)
+        ovf_defect = _ovf_conflict(osrc, odst, colors, pri, n_pad)
 
     def chunk_body(k, carry):
         colors, recolored, n_def, ovf = carry
@@ -267,17 +281,53 @@ def _detect_pass(p_static, ell, osrc, odst, pri, colors, U):
     defect = ((nbrc == colors[:, None]) & (colors[:, None] >= 0)
               & (nbrp > pri[:, None])).any(axis=1)
     if osrc.shape[0] > 0:
-        conflict = ((colors[osrc] == colors[odst]) & (colors[osrc] >= 0)
-                    & (pri[odst] > pri[osrc]))
-        od = jnp.zeros((n_pad,), jnp.uint8).at[osrc].max(
-            conflict.astype(jnp.uint8))
-        defect = defect | od.astype(bool)
+        defect = defect | _ovf_conflict(osrc, odst, colors, pri, n_pad)
     return defect & U & valid_row
 
 
 # --------------------------------------------------------------------------
 # algorithm loops
 # --------------------------------------------------------------------------
+
+def _fused_repair(p_static, ell, osrc, odst, pri, colors, U, max_rounds,
+                  ovf0=False):
+    """Fused detect-and-recolor rounds from an arbitrary (colors, U) start.
+
+    This is the RSOC inner loop factored out of the from-scratch driver so a
+    caller (incremental recoloring, distributed shards) can supply its own
+    seed set U and partial coloring.  Vertices in U are re-colored only when
+    defective *right now*; uncolored seeds (colors < 0) are force-colored on
+    their first pass.  Returns (colors, n_rounds, trace, total_defects, ovf)
+    — one neighbor-gather pass per round.
+    """
+    n, n_pad, C, n_chunks = p_static
+
+    def cond(s):
+        # terminate when a full fused pass detected zero defects: colors were
+        # untouched during that pass, so its detection was complete.
+        colors, U, trace, r, tot, last_def, ovf = s
+        return (last_def > 0) & (r < max_rounds)
+
+    def body(s):
+        colors, U, trace, r, tot, last_def, ovf = s
+        force = U & (colors < 0)
+        # ONE fused detect-and-recolor pass
+        colors2, recolored, n_def, ovf2 = _chunked_pass(
+            p_static, ell, osrc, odst, pri, colors, U, force, detect=True)
+        trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(n_def)
+        # forced vertices were colored speculatively, not verified: keep the
+        # loop alive so the next pass checks them (two adjacent uncolored
+        # seeds can pick the same color from one snapshot)
+        n_work = n_def + force.sum(dtype=jnp.int32)
+        return (colors2, recolored, trace, r + 1, tot + n_def, n_work,
+                ovf | ovf2)
+
+    trace = jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32)
+    state = (colors, U, trace, jnp.int32(0), jnp.int32(0), jnp.int32(1),
+             jnp.bool_(ovf0))
+    colors, U, trace, r, tot, _, ovf = jax.lax.while_loop(cond, body, state)
+    return colors, r, trace, tot, ovf
+
 
 @functools.partial(jax.jit, static_argnames=("p_static", "max_rounds"))
 def _rsoc_loop(ell, osrc, odst, pri, p_static, max_rounds):
@@ -289,25 +339,18 @@ def _rsoc_loop(ell, osrc, odst, pri, p_static, max_rounds):
     # round 0: tentative coloring of the whole graph (chunked, fresh)
     colors1, U, _, ovf0 = _chunked_pass(
         p_static, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
-
-    def cond(s):
-        # terminate when a full fused pass detected zero defects: colors were
-        # untouched during that pass, so its detection was complete.
-        colors, U, trace, r, tot, last_def, ovf = s
-        return (last_def > 0) & (r < max_rounds)
-
-    def body(s):
-        colors, U, trace, r, tot, last_def, ovf = s
-        # ONE fused detect-and-recolor pass
-        colors2, recolored, n_def, ovf2 = _chunked_pass(
-            p_static, ell, osrc, odst, pri, colors, U, zeros, detect=True)
-        trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(n_def)
-        return colors2, recolored, trace, r + 1, tot + n_def, n_def, ovf | ovf2
-
-    trace = jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32)
-    state = (colors1, U, trace, jnp.int32(0), jnp.int32(0), jnp.int32(1), ovf0)
-    colors, U, trace, r, tot, _, ovf = jax.lax.while_loop(cond, body, state)
+    colors, r, trace, tot, ovf = _fused_repair(
+        p_static, ell, osrc, odst, pri, colors1, U, max_rounds, ovf0)
     return colors[:n], r, trace, tot, ovf
+
+
+@functools.partial(jax.jit, static_argnames=("p_static", "max_rounds"))
+def _rsoc_repair_loop(ell, osrc, odst, pri, colors, U, p_static, max_rounds):
+    """Externally-seeded fused repair (full-width passes; no round 0)."""
+    n, n_pad, C, n_chunks = p_static
+    colors, r, trace, tot, ovf = _fused_repair(
+        p_static, ell, osrc, odst, pri, colors, U, max_rounds)
+    return colors, r, trace, tot, ovf
 
 
 @functools.partial(jax.jit, static_argnames=("p_static", "max_rounds"))
@@ -384,14 +427,20 @@ def _jp_loop(src, dst, pri, n, C, max_rounds):
 
 def _run_with_retry(loop, prob: ColoringProblem, n_chunks: int,
                     max_rounds: int):
+    """Run ``loop`` doubling the color cap until it fits.
+
+    Returns (loop output, final C, number of cap-doubling retries).
+    """
     C = prob.C
+    retries = 0
     while True:
         p_static = (prob.n, prob.n_pad, C, n_chunks)
         out = loop(prob.ell, prob.ovf_src, prob.ovf_dst, prob.pri,
                    p_static, max_rounds)
         if not bool(out[-1]):
-            return out, C
+            return out, C, retries
         C *= 2  # rare: color cap exceeded -> retry with doubled cap
+        retries += 1
 
 
 def color_rsoc(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
@@ -399,14 +448,16 @@ def color_rsoc(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
                ell_cap: int = 512, relabel: bool = True) -> ColoringResult:
     """RSOC (paper Alg. 3): fused detect-and-recolor, one pass per round."""
     prob = prepare(g, seed, n_chunks, ell_cap, C, relabel)
-    (colors, r, trace, tot, _), _ = _run_with_retry(
+    (colors, r, trace, tot, _), final_C, retries = _run_with_retry(
         _rsoc_loop, prob, n_chunks, max_rounds)
     colors = _unpermute(colors, prob.perm, prob.n)
     return ColoringResult(colors=colors, n_rounds=int(r),
                           conflicts_per_round=np.asarray(trace),
                           total_conflicts=int(tot),
-                          n_colors=n_colors_used(colors), overflow=False,
-                          gather_passes=1 + int(r))
+                          n_colors=n_colors_used(colors),
+                          overflow=retries > 0,
+                          gather_passes=1 + int(r),
+                          final_C=final_C, retries=retries)
 
 
 def color_cat(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
@@ -414,14 +465,16 @@ def color_cat(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
               ell_cap: int = 512, relabel: bool = True) -> ColoringResult:
     """Catalyurek et al. (paper Alg. 2): two-phase rounds."""
     prob = prepare(g, seed, n_chunks, ell_cap, C, relabel)
-    (colors, r, trace, tot, _), _ = _run_with_retry(
+    (colors, r, trace, tot, _), final_C, retries = _run_with_retry(
         _cat_loop, prob, n_chunks, max_rounds)
     colors = _unpermute(colors, prob.perm, prob.n)
     return ColoringResult(colors=colors, n_rounds=int(r),
                           conflicts_per_round=np.asarray(trace),
                           total_conflicts=int(tot),
-                          n_colors=n_colors_used(colors), overflow=False,
-                          gather_passes=2 * (1 + int(r)))
+                          n_colors=n_colors_used(colors),
+                          overflow=retries > 0,
+                          gather_passes=2 * (1 + int(r)),
+                          final_C=final_C, retries=retries)
 
 
 def color_gm(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
@@ -435,10 +488,20 @@ def color_gm(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
     colors_np = np.asarray(colors[:prob.n]).copy()
     defect_np = np.asarray(defect[:prob.n])
     # serial repair in the *relabeled* space: rebuild neighbor lists from ELL
+    # plus the COO overflow side-channel (capped-width hub rows spill there —
+    # skipping it produced improper repairs on power-law graphs).
     ell_np = np.asarray(prob.ell)
+    osrc_np = np.asarray(prob.ovf_src)
+    odst_np = np.asarray(prob.ovf_dst)
+    order = np.argsort(osrc_np, kind="stable")
+    osrc_sorted, odst_sorted = osrc_np[order], odst_np[order]
     for v in np.nonzero(defect_np)[0]:
         nb = ell_np[v]
-        nc = colors_np[nb[(nb >= 0) & (nb < prob.n)]]
+        nb = nb[(nb >= 0) & (nb < prob.n)]
+        if len(osrc_sorted):
+            lo, hi = np.searchsorted(osrc_sorted, [v, v + 1])
+            nb = np.concatenate([nb, odst_sorted[lo:hi]])
+        nc = colors_np[nb]
         used = set(int(x) for x in nc if x >= 0)
         c = 0
         while c in used:
@@ -449,8 +512,9 @@ def color_gm(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
     return ColoringResult(colors=colors_out, n_rounds=1,
                           conflicts_per_round=np.array([tot]),
                           total_conflicts=tot,
-                          n_colors=n_colors_used(colors_out), overflow=False,
-                          gather_passes=2)
+                          n_colors=n_colors_used(colors_out),
+                          overflow=bool(ovf),
+                          gather_passes=2, final_C=prob.C, retries=0)
 
 
 def color_jp(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
@@ -461,17 +525,21 @@ def color_jp(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
     e = to_edge_list(g)
     src, dst = jnp.asarray(e[:, 0], jnp.int32), jnp.asarray(e[:, 1], jnp.int32)
     pri = jnp.asarray(np.random.default_rng(seed).permutation(n).astype(np.int32))
+    retries = 0
     while True:
         colors, r, ovf = _jp_loop(src, dst, pri, n, Cv, max_rounds)
         if not bool(ovf):
             break
         Cv *= 2
+        retries += 1
     colors = np.asarray(colors)
     return ColoringResult(colors=colors, n_rounds=int(r),
                           conflicts_per_round=np.zeros(1),
                           total_conflicts=0,
-                          n_colors=n_colors_used(colors), overflow=False,
-                          gather_passes=int(r))
+                          n_colors=n_colors_used(colors),
+                          overflow=retries > 0,
+                          gather_passes=int(r),
+                          final_C=Cv, retries=retries)
 
 
 ALGORITHMS = {"gm": color_gm, "cat": color_cat, "rsoc": color_rsoc,

@@ -15,6 +15,13 @@ conflicts.
 
 If |U| overflows the capacity (only plausible in round 1), the round falls
 back to the full-width pass.
+
+The repair loop is factored into ``_compact_repair`` so it can start from an
+externally supplied (colors, U) pair: the from-scratch driver seeds it with
+round 0's defects, while ``repro.dynamic.incremental`` seeds it with the
+endpoints of mutated edges against the previous coloring (DESIGN.md §7).
+Overflow (COO side-channel) edges participate via pass-start snapshots, same
+as the full-width pass.
 """
 from __future__ import annotations
 
@@ -31,14 +38,43 @@ from repro.core import coloring as col
 MAX_ROUNDS_TRACE = col.MAX_ROUNDS_TRACE
 
 
-def _compact_pass(ell, pri, colors, idx, idx_valid, C, n_chunks):
-    """Fused detect-and-recolor over a compacted row-index buffer."""
+def _compact_pass(p_static, ell, osrc, odst, pri, colors, idx, idx_valid):
+    """Fused detect-and-recolor over a compacted row-index buffer.
+
+    ``idx`` holds the (≤ cap) row ids of the current frontier, dead slots
+    hold n_pad (dropped by out-of-bounds scatter).  A row is re-colored when
+    it is defective *right now* — or still uncolored (incremental seeds).
+    Returns (colors, recolored_mask, n_defects, cap_overflowed).
+    """
+    n, n_pad_s, C, n_chunks = p_static
     cap = idx.shape[0]
     cs = cap // n_chunks
     n_pad = colors.shape[0]
+    has_ovf = osrc.shape[0] > 0
+    if has_ovf:
+        # pass-start overflow snapshots (see coloring.py termination
+        # argument), built *frontier-local*: an inverse index maps each
+        # overflow edge to its compacted slot (or nowhere), so the tables
+        # are (cap, C)/(cap,), not (n_pad, C) — the compaction win must
+        # survive the spill regime the dynamic workloads live in.
+        inv = jnp.full((n_pad + 1,), -1, jnp.int32).at[idx].set(
+            jnp.arange(cap, dtype=jnp.int32))
+        olive = (osrc >= 0) & (odst >= 0)
+        pos = jnp.where(olive, inv[jnp.clip(osrc, 0, n_pad)], -1)
+        nbr_c = colors[jnp.clip(odst, 0, n_pad - 1)]
+        ok = (pos >= 0) & (nbr_c >= 0) & (nbr_c < C)
+        snap_forb = jnp.zeros((cap, C), jnp.uint8).at[
+            jnp.clip(pos, 0, cap - 1),
+            jnp.clip(nbr_c, 0, C - 1)].max(ok.astype(jnp.uint8))
+        conf = ((pos >= 0) & (colors[jnp.clip(osrc, 0, n_pad - 1)] == nbr_c)
+                & (nbr_c >= 0)
+                & (pri[jnp.clip(odst, 0, n_pad - 1)]
+                   > pri[jnp.clip(osrc, 0, n_pad - 1)]))
+        ovf_defect = jnp.zeros((cap,), jnp.uint8).at[
+            jnp.clip(pos, 0, cap - 1)].max(conf.astype(jnp.uint8)).astype(bool)
 
     def chunk_body(k, carry):
-        colors, recolored, n_def = carry
+        colors, recolored, n_def, ovf = carry
         lo = k * cs
         ids = jax.lax.dynamic_slice_in_dim(idx, lo, cs, 0)
         live = jax.lax.dynamic_slice_in_dim(idx_valid, lo, cs, 0)
@@ -46,18 +82,75 @@ def _compact_pass(ell, pri, colors, idx, idx_valid, C, n_chunks):
         ell_k = ell[ids_c]
         c_k = colors[ids_c]
         pri_k = pri[ids_c]
-        nbrc, nbrp = col._gather_nbr(ell_k, colors, pri)
+        nbrc, nbrp = col._gather_nbr(ell_k, colors, pri)      # FRESH colors
         defect = ((nbrc == c_k[:, None]) & (c_k[:, None] >= 0)
-                  & (nbrp > pri_k[:, None])).any(axis=1) & live
+                  & (nbrp > pri_k[:, None])).any(axis=1)
+        if has_ovf:
+            defect = defect | jax.lax.dynamic_slice_in_dim(
+                ovf_defect, lo, cs, 0)
+        defect = defect & live
+        work = defect | (live & (c_k < 0))
         n_def = n_def + defect.sum(dtype=jnp.int32)
         forb = col._forbidden_from_nbrc(nbrc, C)
-        mex, _ = col._mex(forb)
-        colors = colors.at[ids_c].set(jnp.where(defect, mex, c_k))
-        recolored = recolored.at[ids_c].max(defect)
-        return colors, recolored, n_def
+        if has_ovf:
+            forb = jnp.maximum(forb, jax.lax.dynamic_slice_in_dim(
+                snap_forb, lo, cs, 0))
+        mex, o = col._mex(forb)
+        # dead slots carry idx == n_pad: out-of-bounds -> dropped
+        colors = colors.at[ids].set(jnp.where(work, mex, c_k), mode="drop")
+        recolored = recolored.at[ids].max(work, mode="drop")
+        return colors, recolored, n_def, ovf | (o & work).any()
 
-    init = (colors, jnp.zeros((n_pad,), bool), jnp.int32(0))
+    init = (colors, jnp.zeros((n_pad,), bool), jnp.int32(0), jnp.bool_(False))
     return jax.lax.fori_loop(0, n_chunks, chunk_body, init)
+
+
+def _compact_repair(p_static, cap, ell, osrc, odst, pri, colors, U,
+                    max_rounds, ovf0=False):
+    """Frontier-compacted fused repair from an arbitrary (colors, U) start.
+
+    Same contract as ``coloring._fused_repair`` (one gather pass per round,
+    U_{r+1} = recolored_r, terminates on a zero-defect pass) but each pass
+    gathers only the ≤ cap compacted frontier rows; rounds whose frontier
+    exceeds ``cap`` fall back to the full-width pass.
+    """
+    n, n_pad, C, n_chunks = p_static
+
+    def compact(U):
+        idx = jnp.nonzero(U, size=cap, fill_value=n_pad)[0].astype(jnp.int32)
+        return idx, idx < n_pad
+
+    def cond(s):
+        return (s[4] > 0) & (s[3] < max_rounds)
+
+    def body(s):
+        colors, U, trace, r, last, tot, ovf = s
+        count = U.sum(dtype=jnp.int32)
+        n_forced = (U & (colors < 0)).sum(dtype=jnp.int32)
+
+        def small(_):
+            idx, live = compact(U)
+            return _compact_pass(p_static, ell, osrc, odst, pri, colors,
+                                 idx, live)
+
+        def big(_):
+            force = U & (colors < 0)
+            return col._chunked_pass(p_static, ell, osrc, odst, pri, colors,
+                                     U, force, detect=True)
+
+        colors2, recolored, n_def, ovf2 = jax.lax.cond(
+            count <= cap, small, big, None)
+        trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(n_def)
+        # forced (uncolored-seed) work is speculative: keep the loop alive
+        # so the next pass verifies it (see coloring._fused_repair)
+        return (colors2, recolored, trace, r + 1, n_def + n_forced,
+                tot + n_def, ovf | ovf2)
+
+    trace = jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32)
+    s = (colors, U, trace, jnp.int32(0), jnp.int32(1), jnp.int32(0),
+         jnp.bool_(ovf0))
+    colors, U, trace, r, _, tot, ovf = jax.lax.while_loop(cond, body, s)
+    return colors, r, trace, tot, ovf
 
 
 @functools.partial(jax.jit, static_argnames=("p_static", "cap", "max_rounds"))
@@ -70,35 +163,18 @@ def _rsoc_compact_loop(ell, osrc, odst, pri, p_static, cap, max_rounds):
     # round 0: full-width chunked coloring (everyone needs a color anyway)
     colors1, U, _, ovf0 = col._chunked_pass(
         p_static, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
-
-    def compact(U):
-        idx = jnp.nonzero(U, size=cap, fill_value=n_pad)[0].astype(jnp.int32)
-        return idx, idx < n_pad
-
-    def cond(s):
-        return (s[4] > 0) & (s[3] < max_rounds)
-
-    def body(s):
-        colors, U, trace, r, last, tot, ovf = s
-        count = U.sum(dtype=jnp.int32)
-
-        def small(_):
-            idx, live = compact(U)
-            return _compact_pass(ell, pri, colors, idx, live, C, n_chunks)
-
-        def big(_):
-            c2, rec, nd, _ = col._chunked_pass(
-                p_static, ell, osrc, odst, pri, colors, U, zeros, detect=True)
-            return c2, rec, nd
-
-        colors2, recolored, n_def = jax.lax.cond(count <= cap, small, big, None)
-        trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(n_def)
-        return colors2, recolored, trace, r + 1, n_def, tot + n_def, ovf
-
-    trace = jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32)
-    s = (colors1, U, trace, jnp.int32(0), jnp.int32(1), jnp.int32(0), ovf0)
-    colors, U, trace, r, _, tot, ovf = jax.lax.while_loop(cond, body, s)
+    colors, r, trace, tot, ovf = _compact_repair(
+        p_static, cap, ell, osrc, odst, pri, colors1, U, max_rounds, ovf0)
     return colors[:n], r, trace, tot, ovf
+
+
+@functools.partial(jax.jit, static_argnames=("p_static", "cap", "max_rounds"))
+def _repair_compact_loop(ell, osrc, odst, pri, colors, U, p_static, cap,
+                         max_rounds):
+    """Externally-seeded compacted repair (no round 0): the incremental
+    recoloring entry point.  Returns full-length (n_pad) colors."""
+    return _compact_repair(p_static, cap, ell, osrc, odst, pri, colors, U,
+                           max_rounds)
 
 
 def color_rsoc_compact(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
@@ -107,9 +183,9 @@ def color_rsoc_compact(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
                        frontier_frac: float = 0.125) -> col.ColoringResult:
     """RSOC with frontier compaction after round 0."""
     prob = col.prepare(g, seed, n_chunks, ell_cap, C, relabel)
-    cap = max(n_chunks, int(prob.n_pad * frontier_frac))
-    cap = -(-cap // n_chunks) * n_chunks
+    cap = frontier_cap(prob.n_pad, n_chunks, frontier_frac)
     C_ = prob.C
+    retries = 0
     while True:
         p_static = (prob.n, prob.n_pad, C_, n_chunks)
         colors, r, trace, tot, ovf = _rsoc_compact_loop(
@@ -118,8 +194,16 @@ def color_rsoc_compact(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
         if not bool(ovf):
             break
         C_ *= 2
+        retries += 1
     colors = col._unpermute(colors, prob.perm, prob.n)
     return col.ColoringResult(
         colors=colors, n_rounds=int(r), conflicts_per_round=np.asarray(trace),
         total_conflicts=int(tot), n_colors=col.n_colors_used(colors),
-        overflow=False, gather_passes=1 + int(r))
+        overflow=retries > 0, gather_passes=1 + int(r),
+        final_C=C_, retries=retries)
+
+
+def frontier_cap(n_pad: int, n_chunks: int, frac: float = 0.125) -> int:
+    """Compacted-frontier capacity: a fraction of n_pad, chunk-aligned."""
+    cap = max(n_chunks, int(n_pad * frac))
+    return -(-cap // n_chunks) * n_chunks

@@ -1,0 +1,20 @@
+"""Dynamic-graph incremental recoloring (DESIGN.md §7).
+
+The static pipeline colors a graph once, from scratch.  Production graphs
+mutate: edges arrive and leave continuously, and a from-scratch recoloring on
+every batch throws away the near-fixed-point coloring already in hand.  This
+package keeps a *device-resident* mutable encoding (ELL slots + COO overflow
+spill) and repairs the coloring with the frontier-compacted fused RSOC pass,
+seeded only from the endpoints of changed edges — work proportional to the
+delta, not the graph.
+
+  delta.py        fixed-shape batched edge insert/delete against ELL+overflow
+  incremental.py  DynamicColoringState + recolor_incremental
+  service.py      ColoringService: long-lived multi-graph engine with a
+                  submit/step API and version-memoized schedule artifacts
+"""
+from repro.dynamic.incremental import (  # noqa: F401
+    DynamicColoringState, dynamic_state, recolor_incremental,
+)
+from repro.dynamic.delta import state_to_csr  # noqa: F401
+from repro.dynamic.service import ColoringService  # noqa: F401

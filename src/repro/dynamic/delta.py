@@ -1,0 +1,220 @@
+"""Batched edge insert/delete against the device-resident ELL+overflow
+encoding (DESIGN.md §7.1).
+
+The mutable graph lives on device as the same two structures the coloring
+passes consume: a fixed-shape ``(n_pad, W)`` ELL slot table (FILL = empty
+slot) and a fixed-capacity COO overflow buffer for edges that do not fit
+their row (capped-width hubs, or rows filled up by later inserts).  Both
+arrays keep fixed shapes across update batches, so a handful of jit
+compilations serve the whole stream:
+
+  * delete (u,v): clear every slot equal to v in row u (and u in row v),
+    and every overflow slot holding (u,v) or (v,u).  Cleared slots become
+    FILL holes that later inserts re-use.
+  * insert (u,v): no-op if the edge is already present (ELL row or
+    overflow); otherwise write into the first FILL slot, spilling to the
+    first FILL overflow slots when the row is full.  If the overflow
+    buffer is full the wave reports failure and the host doubles the
+    buffer (amortized, like vector growth) and re-applies — application
+    is idempotent.
+
+Everything is *vectorized*, never per-edge sequential: overflow membership
+(delete targets, insert presence) is a lexicographic binary search over
+sorted (src, dst) pairs, and ELL mutations are grouped host-side into
+**waves** whose target rows are unique, so each wave is a single
+conflict-free gather/mutate/scatter over ``(delta_cap, W)`` tiles.  Wave
+count equals the largest per-row multiplicity in the batch (1–4 for
+random batches).  Re-inserting a present edge — ELL- or
+overflow-resident — is a no-op, so upsert-style streams do not grow the
+encoding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.csr import CSRGraph, FILL, ell_to_edges, from_edges
+
+
+# --------------------------------------------------------------------------
+# jitted kernels (fixed (delta_cap,) wave shapes)
+# --------------------------------------------------------------------------
+
+_SENTINEL = jnp.int32(2147483647)                   # sorts after any id
+
+
+def _pair_member(qs, qd, s_sorted, d_sorted):
+    """found[i] = (qs[i], qd[i]) ∈ sorted pair list.  Vectorized
+    lexicographic binary search; pairs stay as two int32 arrays — a fused
+    s*n+d key overflows int32 past 2^15 vertices and x64 is disabled."""
+    nb = s_sorted.shape[0]
+    lo = jnp.zeros_like(qs)
+    hi = jnp.full_like(qs, nb)
+    # lower_bound over nb+1 candidate positions: ceil(log2(nb+1)) halvings,
+    # covered by nb.bit_length() for every nb (static trip count)
+    for _ in range(max(nb, 1).bit_length()):
+        mid = (lo + hi) // 2
+        ms, md = s_sorted[mid], d_sorted[mid]
+        less = (ms < qs) | ((ms == qs) & (md < qd))
+        lo = jnp.where(less, mid + 1, lo)
+        hi = jnp.where(less, hi, mid)
+    loc = jnp.clip(lo, 0, nb - 1)
+    return (lo < nb) & (s_sorted[loc] == qs) & (d_sorted[loc] == qd)
+
+
+def _lexsorted(s, d):
+    order = jnp.lexsort((d, s))
+    return s[order], d[order]
+
+
+@jax.jit
+def _delete_overflow(osrc, odst, dels):
+    """Clear every overflow slot matching a delete pair (either direction).
+
+    One vectorized membership test: delete pairs (both directions) are
+    lexsorted and each overflow slot runs a lexicographic binary search.
+    """
+    valid_d = (dels[:, 0] >= 0) & (dels[:, 1] >= 0)
+    ds = jnp.where(valid_d[:, None], dels, _SENTINEL)  # sentinels sort last
+    s_sorted, d_sorted = _lexsorted(
+        jnp.concatenate([ds[:, 0], ds[:, 1]]),
+        jnp.concatenate([ds[:, 1], ds[:, 0]]))
+    dead = ((osrc >= 0) & (odst >= 0)
+            & _pair_member(osrc, odst, s_sorted, d_sorted))
+    return jnp.where(dead, FILL, osrc), jnp.where(dead, FILL, odst)
+
+
+@jax.jit
+def _delete_ell_wave(ell, a, b):
+    """Clear slots == b[i] in row a[i]; rows unique within the wave."""
+    n_pad = ell.shape[0]
+    asafe = jnp.clip(a, 0, n_pad - 1)
+    rows = ell[asafe]
+    rows = jnp.where((b[:, None] >= 0) & (rows == b[:, None]), FILL, rows)
+    aw = jnp.where(a >= 0, asafe, n_pad)            # drop padded entries
+    return ell.at[aw].set(rows, mode="drop")
+
+
+@jax.jit
+def _insert_wave(ell, osrc, odst, a, b):
+    """Insert b[i] into row a[i] (rows unique within the wave), spilling
+    row-full entries to distinct free overflow slots.  Returns
+    (ell, osrc, odst, fail): fail = some spill found no free slot."""
+    n_pad, W = ell.shape
+    ncap = osrc.shape[0]
+    k = a.shape[0]
+    valid = (a >= 0) & (b >= 0)
+    asafe = jnp.clip(a, 0, n_pad - 1)
+    rows = ell[asafe]
+    # presence = ELL row ∪ overflow buffer: without the overflow side an
+    # upsert-style stream re-inserting an overflow-resident edge would
+    # append a duplicate slot per batch and grow the buffer without bound
+    olive = (osrc >= 0) & (odst >= 0)
+    s_sorted, d_sorted = _lexsorted(jnp.where(olive, osrc, _SENTINEL),
+                                    jnp.where(olive, odst, _SENTINEL))
+    present = ((rows == b[:, None]).any(axis=1)
+               | _pair_member(a, b, s_sorted, d_sorted))
+    slot = jnp.argmax(rows == FILL, axis=1)         # first free slot (or 0)
+    free = jnp.take_along_axis(rows, slot[:, None], 1)[:, 0] == FILL
+    do_ell = valid & ~present & free
+    aw = jnp.where(do_ell, asafe, n_pad)
+    ell = ell.at[aw, slot].set(b, mode="drop")
+    # spills: j-th spilling entry takes the j-th free overflow slot
+    spill = valid & ~present & ~free
+    freeslots = jnp.nonzero(osrc == FILL, size=k, fill_value=ncap)[0]
+    rank = jnp.cumsum(spill) - 1
+    oidx = jnp.where(spill, freeslots[jnp.clip(rank, 0, k - 1)], ncap)
+    osrc = osrc.at[oidx].set(a, mode="drop")
+    odst = odst.at[oidx].set(b, mode="drop")
+    fail = (spill & (oidx >= ncap)).any()
+    return ell, osrc, odst, fail
+
+
+# --------------------------------------------------------------------------
+# host orchestration
+# --------------------------------------------------------------------------
+
+def _pad_pairs(pairs: np.ndarray, cap: int) -> jnp.ndarray:
+    out = np.full((cap, 2), FILL, dtype=np.int32)
+    out[:len(pairs)] = pairs
+    return jnp.asarray(out)
+
+
+def _waves(pairs: np.ndarray, cap: int):
+    """Split directed (k, 2) pairs into FILL-padded (cap, 2) waves whose
+    first columns (target rows) are unique within each wave."""
+    if len(pairs) == 0:
+        return
+    a = pairs[:, 0]
+    order = np.argsort(a, kind="stable")
+    sa = a[order]
+    first = np.concatenate([[True], sa[1:] != sa[:-1]])
+    group_start = np.maximum.accumulate(
+        np.where(first, np.arange(len(sa)), 0))
+    rank = np.arange(len(sa)) - group_start       # occurrence # within row
+    for w in range(int(rank.max()) + 1 if len(rank) else 0):
+        sel = order[rank == w]
+        for lo in range(0, len(sel), cap):
+            yield _pad_pairs(pairs[sel[lo:lo + cap]], cap)
+
+
+def apply_updates(ell, osrc, odst, ins: np.ndarray, dels: np.ndarray,
+                  delta_cap: int):
+    """Apply (k, 2) delete-then-insert batches (relabeled-space host arrays).
+
+    Returns (ell, osrc, odst, touched, n_grows): ``touched`` is an (n_pad,)
+    bool device mask of the endpoints of every update (the repair seed set),
+    ``n_grows`` counts overflow-buffer doublings performed.
+    """
+    n_pad = ell.shape[0]
+    ins = np.asarray(ins, dtype=np.int32).reshape(-1, 2)
+    dels = np.asarray(dels, dtype=np.int32).reshape(-1, 2)
+
+    if len(dels):
+        for lo in range(0, len(dels), delta_cap):
+            osrc, odst = _delete_overflow(
+                osrc, odst, _pad_pairs(dels[lo:lo + delta_cap], delta_cap))
+        dd = np.concatenate([dels, dels[:, ::-1]])
+        for wave in _waves(dd, delta_cap):
+            ell = _delete_ell_wave(ell, wave[:, 0], wave[:, 1])
+
+    grows = 0
+    if len(ins):
+        ii = np.concatenate([ins, ins[:, ::-1]])
+        ii = ii[ii[:, 0] != ii[:, 1]]             # drop self-loops
+        for wave in _waves(ii, delta_cap):
+            while True:
+                ell2, osrc2, odst2, fail = _insert_wave(
+                    ell, osrc, odst, wave[:, 0], wave[:, 1])
+                if not bool(fail):
+                    ell, osrc, odst = ell2, osrc2, odst2
+                    break
+                # overflow full: grow and re-apply the wave (idempotent)
+                osrc, odst = grow_overflow(osrc2, odst2)
+                ell = ell2
+                grows += 1
+
+    touched = np.zeros((n_pad,), bool)
+    for e in (ins, dels):
+        if len(e):
+            touched[e.ravel()] = True
+    return ell, osrc, odst, jnp.asarray(touched), grows
+
+
+def grow_overflow(osrc, odst, factor: int = 2):
+    """Double the overflow buffer (FILL-padded).  One recompile per growth."""
+    cap = osrc.shape[0]
+    extra = jnp.full((max(cap, 8) * (factor - 1),), FILL, jnp.int32)
+    return jnp.concatenate([osrc, extra]), jnp.concatenate([odst, extra])
+
+
+def overflow_load(osrc) -> int:
+    """Live (non-FILL) overflow slots."""
+    return int((np.asarray(osrc) >= 0).sum())
+
+
+def state_to_csr(state) -> CSRGraph:
+    """Decode a DynamicColoringState back to a host CSRGraph (original ids)."""
+    edges = ell_to_edges(state.ell, state.n, state.ovf_src, state.ovf_dst)
+    return from_edges(state.n, state.inv_perm[edges], symmetrize=False)

@@ -1,0 +1,173 @@
+"""Incremental recoloring for mutating graphs (DESIGN.md §7.2).
+
+``recolor_incremental`` is the paper's fused detect-and-recolor pass turned
+into a repair primitive: instead of seeding the defect set U with the whole
+vertex set (round 0 of the from-scratch loop), it seeds U with the endpoints
+of the edges changed by an update batch.  Properness of the previous coloring
+guarantees every post-update conflict lies on an inserted edge, so the seed
+set covers all defects; the frontier-compacted repair loop then pays only
+O(|U| * W) bytes per round instead of O(n * W).  Termination is the same
+asymmetric-priority argument as the static loop (coloring.py docstring): the
+highest-priority defective vertex becomes permanently stable every round.
+
+State is immutable-by-convention: every update batch returns a *new*
+``DynamicColoringState`` carrying the mutated device arrays, the repaired
+colors, a bumped version, and repair statistics.  The previous state remains
+valid (arrays are not donated), which gives the service layer cheap
+snapshot/rollback semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coloring as col
+from repro.core import frontier
+from repro.dynamic import delta
+from repro.graphs.csr import CSRGraph, FILL
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicColoringState:
+    """Device-resident mutable-graph coloring state (relabeled space)."""
+
+    ell: jnp.ndarray         # (n_pad, W) neighbor slots, FILL = empty
+    ovf_src: jnp.ndarray     # (ovf_cap,) overflow COO, FILL = free slot
+    ovf_dst: jnp.ndarray
+    pri: jnp.ndarray         # (n_pad,) asymmetric tie-break priorities
+    colors_dev: jnp.ndarray  # (n_pad,) current proper coloring
+    n: int
+    n_pad: int
+    C: int                   # color cap (doubles on overflow, persisted)
+    n_chunks: int
+    frontier_cap: int        # compacted-frontier capacity (rows)
+    delta_cap: int           # update-slice width (fixed shape per slice)
+    perm: np.ndarray         # old id -> new id
+    inv_perm: np.ndarray     # new id -> old id
+    version: int = 0
+    last_rounds: int = 0
+    last_conflicts: int = 0
+    last_gather_passes: int = 0     # compacted passes of the last repair
+    total_gather_passes: int = 0
+    retries: int = 0                # cumulative color-cap doublings
+    ovf_grows: int = 0              # cumulative overflow-buffer growths
+
+    @property
+    def colors(self) -> np.ndarray:
+        """Current coloring over original vertex ids."""
+        return np.asarray(self.colors_dev)[self.perm[:self.n]]
+
+    @property
+    def n_colors(self) -> int:
+        return col.n_colors_used(np.asarray(self.colors_dev)[:self.n])
+
+    def summary(self) -> dict:
+        return {"version": self.version, "colors": self.n_colors,
+                "rounds": self.last_rounds,
+                "conflicts": self.last_conflicts,
+                "gather_passes": self.last_gather_passes,
+                "total_gather_passes": self.total_gather_passes,
+                "final_C": self.C, "retries": self.retries,
+                "ovf_grows": self.ovf_grows,
+                "ovf_load": delta.overflow_load(self.ovf_src)}
+
+
+def dynamic_state(g: CSRGraph, seed: int = 0, n_chunks: int = 16,
+                  ell_cap: int = 512, C: Optional[int] = None,
+                  ell_slack: int = 4, ovf_cap: Optional[int] = None,
+                  delta_cap: int = 2048, frontier_frac: float = 0.125,
+                  max_rounds: int = 1000) -> DynamicColoringState:
+    """Encode ``g`` for mutation and color it from scratch once.
+
+    ``ell_slack`` free slots are appended to every row so typical inserts
+    land in ELL; ``ovf_cap`` sizes the spill buffer (grows on demand).
+    """
+    prob = col.prepare(g, seed, n_chunks, ell_cap, C)
+    (colors_n, r, trace, tot, _), final_C, retries = col._run_with_retry(
+        col._rsoc_loop, prob, n_chunks, max_rounds)
+
+    ell_np = np.asarray(prob.ell)
+    if ell_slack > 0:
+        pad = np.full((ell_np.shape[0], ell_slack), FILL, np.int32)
+        ell_np = np.concatenate([ell_np, pad], axis=1)
+    n_ovf = int(prob.ovf_src.shape[0])
+    cap = int(ovf_cap) if ovf_cap is not None else max(64, 2 * n_ovf,
+                                                       delta_cap // 2)
+    cap = max(cap, n_ovf, 8)
+    osrc = np.full((cap,), FILL, np.int32)
+    odst = np.full((cap,), FILL, np.int32)
+    osrc[:n_ovf] = np.asarray(prob.ovf_src)
+    odst[:n_ovf] = np.asarray(prob.ovf_dst)
+
+    colors_pad = np.full((prob.n_pad,), -1, np.int32)
+    colors_pad[:prob.n] = np.asarray(colors_n)
+    inv_perm = np.argsort(prob.perm)
+    return DynamicColoringState(
+        ell=jnp.asarray(ell_np), ovf_src=jnp.asarray(osrc),
+        ovf_dst=jnp.asarray(odst), pri=prob.pri,
+        colors_dev=jnp.asarray(colors_pad),
+        n=prob.n, n_pad=prob.n_pad, C=final_C, n_chunks=n_chunks,
+        frontier_cap=frontier.frontier_cap(prob.n_pad, n_chunks,
+                                           frontier_frac),
+        delta_cap=int(delta_cap), perm=prob.perm, inv_perm=inv_perm,
+        version=0, last_rounds=int(r), last_conflicts=int(tot),
+        last_gather_passes=1 + int(r), total_gather_passes=1 + int(r),
+        retries=retries, ovf_grows=0)
+
+
+def _check_edges(edges, n: int, what: str) -> np.ndarray:
+    # np.array (not asarray): always copy, so a caller reusing its batch
+    # buffer cannot mutate edges after validation (service queues them)
+    e = np.array(edges, dtype=np.int64).reshape(-1, 2)
+    if len(e) and (e.min() < 0 or e.max() >= n):
+        raise ValueError(f"{what} contains vertex ids outside [0, {n})")
+    return e
+
+
+def recolor_incremental(state: DynamicColoringState,
+                        inserts=None, deletes=None,
+                        max_rounds: int = 1000) -> DynamicColoringState:
+    """Apply an undirected edge update batch and repair the coloring.
+
+    ``inserts`` / ``deletes`` are (k, 2) arrays of *original* vertex ids.
+    Deletes are applied before inserts.  Returns a new state whose coloring
+    is proper for the mutated graph; the input state is left untouched.
+    """
+    ins = _check_edges(inserts if inserts is not None else [], state.n,
+                       "inserts")
+    dels = _check_edges(deletes if deletes is not None else [], state.n,
+                        "deletes")
+    if len(ins) == 0 and len(dels) == 0:
+        return state
+
+    # host -> relabeled space
+    ins_r = state.perm[ins] if len(ins) else ins
+    dels_r = state.perm[dels] if len(dels) else dels
+
+    ell, osrc, odst, U, grows = delta.apply_updates(
+        state.ell, state.ovf_src, state.ovf_dst, ins_r, dels_r,
+        state.delta_cap)
+
+    # repair: frontier-compacted fused RSOC seeded from touched endpoints
+    C = state.C
+    retries = 0
+    while True:
+        p_static = (state.n, state.n_pad, C, state.n_chunks)
+        colors2, r, trace, tot, ovf = frontier._repair_compact_loop(
+            ell, osrc, odst, state.pri, state.colors_dev, U, p_static,
+            state.frontier_cap, max_rounds)
+        if not bool(ovf):
+            break
+        C *= 2  # rare: color cap exceeded -> re-repair with doubled cap
+        retries += 1
+
+    passes = int(r)
+    return dataclasses.replace(
+        state, ell=ell, ovf_src=osrc, ovf_dst=odst, colors_dev=colors2,
+        C=C, version=state.version + 1, last_rounds=int(r),
+        last_conflicts=int(tot), last_gather_passes=passes,
+        total_gather_passes=state.total_gather_passes + passes,
+        retries=state.retries + retries, ovf_grows=state.ovf_grows + grows)

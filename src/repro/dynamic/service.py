@@ -1,0 +1,141 @@
+"""Long-lived coloring service over many mutating graphs (DESIGN.md §7.3).
+
+``ColoringService`` is the dynamic-graph analogue of ``serving/serve_loop``'s
+engine: it owns device-resident ``DynamicColoringState``s for many named
+graphs, accepts edge-update batches through ``submit`` and applies them on
+``step`` (one incremental repair per batch, one version bump each), and
+serves coloring-derived artifacts — the color classes consumed by vertex
+kernels and the dst-bucket edge coloring consumed by the GNN scatter path —
+from a version-keyed memo that mutation invalidates automatically.
+
+Queries between steps are cheap: colors and artifacts always reflect the
+last stepped version, never a half-applied batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import coloring as col
+from repro.core import schedule
+from repro.dynamic import delta
+from repro.dynamic.incremental import (DynamicColoringState, _check_edges,
+                                       dynamic_state, recolor_incremental)
+from repro.graphs.csr import CSRGraph, to_edge_list
+
+
+@dataclasses.dataclass
+class UpdateBatch:
+    inserts: Optional[np.ndarray]
+    deletes: Optional[np.ndarray]
+
+
+class ColoringService:
+    def __init__(self, **default_opts):
+        self._states: dict[str, DynamicColoringState] = {}
+        self._pending: dict[str, list[UpdateBatch]] = {}
+        self._memo: dict[tuple[str, str], tuple[int, object]] = {}
+        self._opts = dict(default_opts)
+
+    # -- graph lifecycle ----------------------------------------------------
+
+    def add_graph(self, name: str, g: CSRGraph, **opts) -> int:
+        """Encode + color ``g`` from scratch; returns the initial version."""
+        if name in self._states:
+            raise ValueError(f"graph {name!r} already registered")
+        self._states[name] = dynamic_state(g, **{**self._opts, **opts})
+        self._pending[name] = []
+        return self._states[name].version
+
+    def remove_graph(self, name: str) -> None:
+        self._state(name)
+        del self._states[name]
+        del self._pending[name]
+        self._memo = {k: v for k, v in self._memo.items() if k[0] != name}
+
+    def graphs(self) -> list[str]:
+        return sorted(self._states)
+
+    def _state(self, name: str) -> DynamicColoringState:
+        if name not in self._states:
+            raise KeyError(f"unknown graph {name!r}; have {self.graphs()}")
+        return self._states[name]
+
+    # -- submit/step --------------------------------------------------------
+
+    def submit(self, name: str, inserts=None, deletes=None) -> int:
+        """Queue an update batch; returns the queue depth for ``name``.
+
+        Validation happens *here*, not in step(): a malformed batch must
+        bounce back to its submitter, never sit poisoning the queue."""
+        st = self._state(name)
+        ins = _check_edges(inserts if inserts is not None else [], st.n,
+                           "inserts")
+        dels = _check_edges(deletes if deletes is not None else [], st.n,
+                            "deletes")
+        self._pending[name].append(UpdateBatch(ins, dels))
+        return len(self._pending[name])
+
+    def pending(self, name: str) -> int:
+        self._state(name)
+        return len(self._pending[name])
+
+    def step(self, name: Optional[str] = None) -> dict[str, dict]:
+        """Drain pending batches (one graph, or all); returns per-graph
+        repair stats of the last applied batch."""
+        names = [name] if name is not None else self.graphs()
+        out = {}
+        for nm in names:
+            st = self._state(nm)
+            for batch in self._pending[nm]:
+                st = recolor_incremental(st, batch.inserts, batch.deletes)
+            self._pending[nm] = []
+            self._states[nm] = st
+            out[nm] = st.summary()
+        return out
+
+    # -- queries (always reflect the last stepped version) ------------------
+
+    def version(self, name: str) -> int:
+        return self._state(name).version
+
+    def colors(self, name: str) -> np.ndarray:
+        return self._state(name).colors
+
+    def stats(self, name: str) -> dict:
+        return self._state(name).summary()
+
+    def graph(self, name: str) -> CSRGraph:
+        """Decode the current device-resident graph (original ids)."""
+        return self._memoized(name, "csr",
+                              lambda st: delta.state_to_csr(st))
+
+    def vertex_schedule(self, name: str) -> list[np.ndarray]:
+        """Color classes (independent sets) of the current coloring — the
+        paper's vertex-kernel execution schedule, without recoloring."""
+        def build(st: DynamicColoringState):
+            colors = st.colors
+            return [np.nonzero(colors == c)[0]
+                    for c in range(col.n_colors_used(colors))]
+        return self._memoized(name, "vertex_schedule", build)
+
+    def edge_colors(self, name: str):
+        """Dst-bucket edge coloring of the current graph for conflict-free
+        scatter (models.gnn.colored_segment_sum).  (edge_list, colors, k)."""
+        def build(st: DynamicColoringState):
+            e = to_edge_list(self.graph(name))   # shares the memoized decode
+            ec, k = schedule.edge_color_by_dst(e[:, 0], e[:, 1], st.n)
+            return e, ec, k
+        return self._memoized(name, "edge_colors", build)
+
+    def _memoized(self, name: str, kind: str, build):
+        st = self._state(name)
+        key = (name, kind)
+        hit = self._memo.get(key)
+        if hit is not None and hit[0] == st.version:
+            return hit[1]
+        art = build(st)
+        self._memo[key] = (st.version, art)
+        return art

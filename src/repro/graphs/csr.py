@@ -95,6 +95,36 @@ def to_ell(g: CSRGraph, max_degree: Optional[int] = None, pad_vertices_to: Optio
     return ell
 
 
+def ell_to_edges(ell: np.ndarray, n: int,
+                 ovf_src: Optional[np.ndarray] = None,
+                 ovf_dst: Optional[np.ndarray] = None) -> np.ndarray:
+    """ELL (+ optional COO overflow) -> (m, 2) directed edge list.
+
+    The inverse boundary of `to_ell` for the *mutable* encoding
+    (DESIGN.md §7.1): FILL slots — empty ELL cells and freed overflow
+    entries — are skipped, so a slot table mutated by insert/delete batches
+    decodes to exactly its live edge set.
+    """
+    ell = np.asarray(ell)[:n]
+    row, slot = np.nonzero(ell >= 0)
+    src = row.astype(np.int64)
+    dst = ell[row, slot].astype(np.int64)
+    if ovf_src is not None and len(ovf_src):
+        os_np, od_np = np.asarray(ovf_src), np.asarray(ovf_dst)
+        live = (os_np >= 0) & (od_np >= 0)
+        src = np.concatenate([src, os_np[live].astype(np.int64)])
+        dst = np.concatenate([dst, od_np[live].astype(np.int64)])
+    return np.stack([src, dst], axis=1)
+
+
+def from_ell(ell: np.ndarray, n: int,
+             ovf_src: Optional[np.ndarray] = None,
+             ovf_dst: Optional[np.ndarray] = None) -> CSRGraph:
+    """Rebuild a CSRGraph from the (possibly mutated) device encoding."""
+    return from_edges(n, ell_to_edges(ell, n, ovf_src, ovf_dst),
+                      symmetrize=False)
+
+
 def shuffle_vertices(g: CSRGraph, seed: int = 0) -> CSRGraph:
     """Random relabel of vertex ids (paper shuffles RMAT ids to kill locality)."""
     rng = np.random.default_rng(seed)

@@ -151,9 +151,19 @@ def radius_graph(positions: np.ndarray, cutoff: float, max_degree: int | None = 
 def paper_suite(scale: str = "small") -> dict[str, CSRGraph]:
     """The six graph classes of the paper's Table 1 at a CPU-feasible scale.
 
+    scale='tiny'   : ~0.5-1k vertices  (CI bench-smoke, sub-second sections)
     scale='small'  : ~10-50k vertices  (unit/bench default, seconds)
     scale='medium' : ~250k vertex meshes + 2^18-vertex RMATs (paper-mesh-scale)
     """
+    if scale == "tiny":
+        return {
+            "mesh2d": mesh2d(24, 24),
+            "bmw3_2": mesh3d(8, 8, 8),
+            "pwtk": mesh3d(10, 8, 6),
+            "rmat_er": rmat_er(9),
+            "rmat_g": rmat_g(9),
+            "rmat_b": rmat_b(9),
+        }
     if scale == "small":
         return {
             "mesh2d": mesh2d(128, 128),

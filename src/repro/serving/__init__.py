@@ -1,0 +1,13 @@
+"""Serving engines: long-lived, device-resident, submit/step APIs.
+
+Two engines share the pattern (fixed-shape state, arrival/departure without
+recompilation, queries always reflecting a fully-stepped state):
+
+  * ``ServeEngine`` (`serve_loop.py`) — continuous-batching LM decode over
+    fixed-capacity KV slots.
+  * ``ColoringService`` (`repro.dynamic.service`) — incremental graph
+    recoloring over mutating graphs, re-exported here as part of the
+    serving surface (DESIGN.md §7.3).
+"""
+from repro.serving.serve_loop import Request, ServeEngine  # noqa: F401
+from repro.dynamic.service import ColoringService  # noqa: F401

@@ -1,9 +1,16 @@
 """The paper's algorithms: correctness, termination, quality, and the
 claimed RSOC-vs-CAT behaviour (fewer gather passes, same color quality).
-Includes hypothesis property tests over random graphs."""
+Includes property tests over random graphs — via hypothesis when it is
+installed, via seeded numpy sampling otherwise (the container has no
+network; hard-requiring hypothesis made the whole module uncollectable)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import coloring as col
 from repro.core.frontier import color_rsoc_compact
@@ -113,47 +120,109 @@ def test_distance2_coloring():
 
 
 # --------------------------------------------------------------------------
-# hypothesis property tests
+# regressions
 # --------------------------------------------------------------------------
 
-@st.composite
-def random_graph(draw):
-    n = draw(st.integers(2, 120))
-    m = draw(st.integers(0, 4 * n))
-    edges = draw(st.lists(
-        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
-        min_size=m, max_size=m))
-    return from_edges(n, np.array(edges, dtype=np.int64).reshape(-1, 2))
-
-
-@given(random_graph(), st.sampled_from(ALGOS), st.integers(0, 3),
-       st.sampled_from([1, 2, 16]))
-@settings(max_examples=40, deadline=None)
-def test_property_proper_and_bounded(g, algo, seed, n_chunks):
-    """Invariant: any algorithm, any seed, any chunking -> proper coloring
-    with <= max_degree+1 colors, terminating."""
-    kw = {} if algo == "jp" else {"n_chunks": n_chunks}
-    res = col.ALGORITHMS[algo](g, seed=seed, **kw)
-    assert col.is_proper(g, res.colors)
-    assert res.n_colors <= g.max_degree + 1
-
-
-@given(random_graph(), st.integers(0, 2))
-@settings(max_examples=20, deadline=None)
-def test_property_power_graph_contains_base(g, seed):
-    """G^2 proper coloring is also proper on G (power graph ⊇ G)."""
-    gd = power_graph(g, 2)
-    res = col.color_rsoc(gd, seed=seed)
+def test_gm_repair_includes_overflow_edges():
+    """Regression: with ell_cap small enough to spill hub rows into the COO
+    overflow side-channel, GM's serial repair used to rebuild forbidden sets
+    from the ELL rows only, producing improper colorings."""
+    g = gen.rmat_b(9, edge_factor=16)
+    assert g.max_degree > 8  # the cap below really forces overflow
+    res = col.color_gm(g, seed=1, ell_cap=8)
     assert col.is_proper(g, res.colors)
 
 
-@given(st.integers(2, 40), st.integers(0, 3))
-@settings(max_examples=20, deadline=None)
-def test_property_complete_graph_needs_n_colors(n, seed):
-    """K_n requires exactly n colors — tests the mex/overflow retry path."""
+def test_cap_doubling_recorded():
+    """K_48 under C=32 must double the cap and report it in the result."""
+    n = 48
     ii, jj = np.meshgrid(np.arange(n), np.arange(n))
-    edges = np.stack([ii[ii != jj], jj[ii != jj]], axis=1)
-    g = from_edges(n, edges)
-    res = col.color_rsoc(g, seed=seed, C=32)
-    assert col.is_proper(g, res.colors)
-    assert res.n_colors == n
+    g = from_edges(n, np.stack([ii[ii != jj], jj[ii != jj]], axis=1))
+    res = col.color_rsoc(g, seed=0, C=32)
+    assert col.is_proper(g, res.colors) and res.n_colors == n
+    assert res.retries >= 1 and res.overflow and res.final_C >= n
+    s = res.summary()
+    assert s["final_C"] == res.final_C and s["retries"] == res.retries
+    # no doubling needed -> retries 0 and final_C is the requested cap
+    res2 = col.color_rsoc(g, seed=0, C=64)
+    assert res2.retries == 0 and not res2.overflow and res2.final_C == 64
+
+
+# --------------------------------------------------------------------------
+# property tests (hypothesis when available, seeded numpy otherwise)
+# --------------------------------------------------------------------------
+
+def _np_random_graph(rng):
+    n = int(rng.integers(2, 120))
+    m = int(rng.integers(0, 4 * n))
+    edges = rng.integers(0, n, size=(m, 2))
+    return from_edges(n, edges.astype(np.int64))
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def random_graph(draw):
+        n = draw(st.integers(2, 120))
+        m = draw(st.integers(0, 4 * n))
+        edges = draw(st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=m, max_size=m))
+        return from_edges(n, np.array(edges, dtype=np.int64).reshape(-1, 2))
+
+    @given(random_graph(), st.sampled_from(ALGOS), st.integers(0, 3),
+           st.sampled_from([1, 2, 16]))
+    @settings(max_examples=40, deadline=None)
+    def test_property_proper_and_bounded(g, algo, seed, n_chunks):
+        """Invariant: any algorithm, any seed, any chunking -> proper
+        coloring with <= max_degree+1 colors, terminating."""
+        kw = {} if algo == "jp" else {"n_chunks": n_chunks}
+        res = col.ALGORITHMS[algo](g, seed=seed, **kw)
+        assert col.is_proper(g, res.colors)
+        assert res.n_colors <= g.max_degree + 1
+
+    @given(random_graph(), st.integers(0, 2))
+    @settings(max_examples=20, deadline=None)
+    def test_property_power_graph_contains_base(g, seed):
+        """G^2 proper coloring is also proper on G (power graph ⊇ G)."""
+        gd = power_graph(g, 2)
+        res = col.color_rsoc(gd, seed=seed)
+        assert col.is_proper(g, res.colors)
+
+    @given(st.integers(2, 40), st.integers(0, 3))
+    @settings(max_examples=20, deadline=None)
+    def test_property_complete_graph_needs_n_colors(n, seed):
+        """K_n requires exactly n colors — tests the mex/overflow retry."""
+        ii, jj = np.meshgrid(np.arange(n), np.arange(n))
+        edges = np.stack([ii[ii != jj], jj[ii != jj]], axis=1)
+        g = from_edges(n, edges)
+        res = col.color_rsoc(g, seed=seed, C=32)
+        assert col.is_proper(g, res.colors)
+        assert res.n_colors == n
+else:
+    @pytest.mark.parametrize("case", range(12))
+    def test_property_proper_and_bounded(case):
+        rng = np.random.default_rng(1000 + case)
+        g = _np_random_graph(rng)
+        algo = ALGOS[case % len(ALGOS)]
+        n_chunks = [1, 2, 16][case % 3]
+        kw = {} if algo == "jp" else {"n_chunks": n_chunks}
+        res = col.ALGORITHMS[algo](g, seed=case, **kw)
+        assert col.is_proper(g, res.colors)
+        assert res.n_colors <= g.max_degree + 1
+
+    @pytest.mark.parametrize("case", range(6))
+    def test_property_power_graph_contains_base(case):
+        rng = np.random.default_rng(2000 + case)
+        g = _np_random_graph(rng)
+        gd = power_graph(g, 2)
+        res = col.color_rsoc(gd, seed=case)
+        assert col.is_proper(g, res.colors)
+
+    @pytest.mark.parametrize("n,seed", [(2, 0), (17, 1), (33, 2), (40, 3)])
+    def test_property_complete_graph_needs_n_colors(n, seed):
+        ii, jj = np.meshgrid(np.arange(n), np.arange(n))
+        edges = np.stack([ii[ii != jj], jj[ii != jj]], axis=1)
+        g = from_edges(n, edges)
+        res = col.color_rsoc(g, seed=seed, C=32)
+        assert col.is_proper(g, res.colors)
+        assert res.n_colors == n

@@ -1,0 +1,267 @@
+"""Dynamic subsystem: exact encode/mutate/decode round-trips, properness
+under random update streams, delta-proportional repair cost, and the
+ColoringService engine."""
+import numpy as np
+import pytest
+
+from repro.core import coloring as col
+from repro.dynamic import (ColoringService, dynamic_state,
+                           recolor_incremental, state_to_csr)
+from repro.graphs import generators as gen
+from repro.graphs.csr import from_edges, to_edge_list
+
+
+def edge_set(g):
+    e = to_edge_list(g)
+    e = e[e[:, 0] != e[:, 1]]
+    return set(map(tuple, np.sort(e, axis=1).tolist()))
+
+
+def random_batch(rng, n, ref_edges, n_ins, n_del):
+    ins = rng.integers(0, n, size=(n_ins, 2))
+    ins = ins[ins[:, 0] != ins[:, 1]]
+    cur = sorted(ref_edges)
+    n_del = min(n_del, len(cur))
+    dels = np.array([cur[i] for i in
+                     rng.choice(len(cur), size=n_del, replace=False)]) \
+        if n_del else np.zeros((0, 2), np.int64)
+    return ins, dels
+
+
+# --------------------------------------------------------------------------
+# delta encoding: mutations are exact (decode == reference edge set)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opts", [
+    {},                                               # all-ELL regime
+    {"ell_cap": 6, "ell_slack": 0, "ovf_cap": 8},     # heavy spill regime
+])
+def test_delta_roundtrip_exact(opts):
+    g = gen.erdos_renyi(400, 10.0, seed=7)
+    st = dynamic_state(g, seed=1, delta_cap=128, **opts)
+    ref = edge_set(g)
+    assert edge_set(state_to_csr(st)) == ref
+    rng = np.random.default_rng(11)
+    for _ in range(4):
+        ins, dels = random_batch(rng, 400, ref, 90, 60)
+        st = recolor_incremental(st, inserts=ins, deletes=dels)
+        ref -= set(map(tuple, np.sort(dels, axis=1).tolist()))
+        ref |= set(map(tuple, np.sort(ins, axis=1).tolist()))
+        assert edge_set(state_to_csr(st)) == ref
+
+
+def test_delta_noop_and_duplicates():
+    g = gen.mesh2d(12, 12)
+    st = dynamic_state(g, seed=0, delta_cap=64)
+    ref = edge_set(g)
+    e0 = to_edge_list(g)[0]
+    # re-inserting existing edges, deleting absent ones, duplicate inserts
+    st2 = recolor_incremental(
+        st, inserts=np.array([e0, e0, [0, 5], [0, 5]]),
+        deletes=np.array([[1, 100]]) if (1, 100) not in ref else None)
+    got = edge_set(state_to_csr(st2))
+    assert got == ref | {(0, 5)}
+    assert col.is_proper(state_to_csr(st2), st2.colors)
+    # empty batch: state returned unchanged
+    assert recolor_incremental(st2) is st2
+
+
+# --------------------------------------------------------------------------
+# property: any update stream keeps the coloring proper
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname,seed", [
+    ("er", 0), ("er", 1), ("rmat_b", 2), ("mesh", 3),
+])
+def test_property_stream_stays_proper(gname, seed):
+    g = {"er": gen.erdos_renyi(600, 8.0, seed=5),
+         "rmat_b": gen.rmat_b(9, edge_factor=8),
+         "mesh": gen.mesh2d(24, 24)}[gname]
+    st = dynamic_state(g, seed=seed, delta_cap=256)
+    ref = edge_set(g)
+    rng = np.random.default_rng(seed)
+    for it in range(6):
+        n_ins = int(rng.integers(0, 120))
+        n_del = int(rng.integers(0, 120))
+        ins, dels = random_batch(rng, g.n_vertices, ref, n_ins, n_del)
+        st = recolor_incremental(st, inserts=ins, deletes=dels)
+        dec = state_to_csr(st)
+        assert col.is_proper(dec, st.colors), f"improper after batch {it}"
+        ref -= set(map(tuple, np.sort(dels, axis=1).tolist()))
+        ref |= set(map(tuple, np.sort(ins, axis=1).tolist()))
+    assert edge_set(state_to_csr(st)) == ref
+
+
+def test_property_spill_stream_stays_proper():
+    """Hub rows overflow into COO; stream mutates through the spill path."""
+    g = gen.rmat_b(9, edge_factor=16)
+    st = dynamic_state(g, seed=2, ell_cap=8, ell_slack=1, ovf_cap=64,
+                       delta_cap=128)
+    rng = np.random.default_rng(9)
+    ref = edge_set(g)
+    for it in range(4):
+        ins, dels = random_batch(rng, g.n_vertices, ref, 100, 50)
+        st = recolor_incremental(st, inserts=ins, deletes=dels)
+        dec = state_to_csr(st)
+        assert col.is_proper(dec, st.colors), f"improper after batch {it}"
+        ref -= set(map(tuple, np.sort(dels, axis=1).tolist()))
+        ref |= set(map(tuple, np.sort(ins, axis=1).tolist()))
+        assert edge_set(dec) == ref
+
+
+def test_color_cap_doubling_on_clique_injection():
+    """Injecting K_40 into a 32-cap state exercises the C-doubling retry."""
+    st = dynamic_state(gen.mesh2d(8, 8), seed=0, C=32, delta_cap=128)
+    n = 40
+    ii, jj = np.meshgrid(np.arange(n), np.arange(n))
+    st = recolor_incremental(st, inserts=np.stack([ii[ii < jj],
+                                                   jj[ii < jj]], 1))
+    assert col.is_proper(state_to_csr(st), st.colors)
+    assert st.n_colors == n
+    assert st.retries >= 1 and st.C >= n
+    assert st.ovf_grows >= 1  # clique rows spilled past the initial buffer
+
+
+# --------------------------------------------------------------------------
+# the point of the subsystem: repair cost ~ delta, not graph size
+# --------------------------------------------------------------------------
+
+def test_small_delta_far_fewer_passes_than_scratch():
+    g = gen.rmat_g(12)
+    scratch = col.color_rsoc(g, seed=1)
+    st = dynamic_state(g, seed=1)
+    rng = np.random.default_rng(4)
+    ins = rng.integers(0, g.n_vertices, size=(40, 2))
+    ins = ins[ins[:, 0] != ins[:, 1]]
+    st = recolor_incremental(st, inserts=ins)
+    assert col.is_proper(state_to_csr(st), st.colors)
+    assert st.last_gather_passes < scratch.gather_passes
+    # and each incremental pass touches <= frontier_cap rows, not n_pad
+    assert st.frontier_cap < st.n_pad
+
+
+def test_deletes_only_single_verify_pass():
+    g = gen.mesh2d(24, 24)
+    st = dynamic_state(g, seed=0)
+    dels = to_edge_list(g)[:50]
+    st2 = recolor_incremental(st, deletes=dels)
+    # deletions cannot create defects: one verify pass, zero conflicts
+    assert st2.last_gather_passes == 1
+    assert st2.last_conflicts == 0
+    assert np.array_equal(st2.colors, st.colors)
+
+
+def test_uncolored_seed_repair_is_verified():
+    """Regression: adjacent uncolored seeds force-colored from one snapshot
+    can pick the same color; the repair loop must keep going until a pass
+    verifies them (lockstep n_chunks=1 is the adversarial case)."""
+    import jax.numpy as jnp
+    from repro.core import frontier
+    from repro.graphs.csr import from_edges
+
+    g = from_edges(4, np.array([[0, 1], [1, 2], [2, 3], [3, 0], [0, 2]]))
+    prob = col.prepare(g, seed=0, n_chunks=1, relabel=False)
+    n_pad = prob.n_pad
+    colors0 = jnp.full((n_pad,), -1, jnp.int32)
+    U0 = jnp.arange(n_pad) < prob.n
+    p_static = (prob.n, n_pad, prob.C, 1)
+    for loop, extra in ((col._rsoc_repair_loop, ()),
+                        (frontier._repair_compact_loop, (n_pad,))):
+        out = loop(prob.ell, prob.ovf_src, prob.ovf_dst, prob.pri,
+                   colors0, U0, p_static, *extra, 50)
+        colors = np.asarray(out[0])[:prob.n]
+        assert col.is_proper(g, colors), loop.__name__
+
+
+def test_upsert_stream_does_not_grow_overflow():
+    """Regression: re-inserting an overflow-resident edge must be a no-op,
+    not a duplicate overflow slot per batch."""
+    from repro.dynamic.delta import overflow_load
+
+    g = gen.rmat_b(9, edge_factor=16)
+    st = dynamic_state(g, seed=2, ell_cap=8, ell_slack=0, delta_cap=64)
+    assert overflow_load(st.ovf_src) > 0
+    # pick edges that live in overflow: decode and re-insert everything
+    und = to_edge_list(state_to_csr(st))
+    und = und[und[:, 0] < und[:, 1]][:200]
+    load0 = overflow_load(st.ovf_src)
+    for _ in range(3):
+        st = recolor_incremental(st, inserts=und)
+    assert overflow_load(st.ovf_src) == load0
+    assert edge_set(state_to_csr(st)) == edge_set(g)
+
+
+# --------------------------------------------------------------------------
+# ColoringService
+# --------------------------------------------------------------------------
+
+def test_service_multi_graph_smoke():
+    svc = ColoringService(delta_cap=128)
+    svc.add_graph("mesh", gen.mesh2d(16, 16))
+    svc.add_graph("rmat", gen.rmat_g(10))
+    assert svc.graphs() == ["mesh", "rmat"]
+    rng = np.random.default_rng(0)
+
+    # queries before any update
+    for name in svc.graphs():
+        assert col.is_proper(svc.graph(name), svc.colors(name))
+
+    # schedule artifacts are memoized by version and invalidated on mutation
+    sched0 = svc.vertex_schedule("mesh")
+    assert svc.vertex_schedule("mesh") is sched0
+    v0 = svc.version("mesh")
+    assert svc.submit("mesh", inserts=rng.integers(0, 256, (30, 2))) == 1
+    assert svc.submit("rmat", deletes=to_edge_list(gen.rmat_g(10))[:40]) == 1
+    stats = svc.step()
+    assert svc.version("mesh") == v0 + 1 and svc.pending("mesh") == 0
+    assert set(stats) == {"mesh", "rmat"}
+    sched1 = svc.vertex_schedule("mesh")
+    assert sched1 is not sched0            # memo invalidated by version bump
+    assert svc.vertex_schedule("mesh") is sched1
+
+    # color classes really are independent sets of the current graph
+    for name in svc.graphs():
+        g = svc.graph(name)
+        colors = svc.colors(name)
+        assert col.is_proper(g, colors)
+        for cls in svc.vertex_schedule(name):
+            cset = set(cls.tolist())
+            for v in cls:
+                assert cset.isdisjoint(g.neighbors(v).tolist())
+
+    # dst-bucket edge coloring artifact
+    e, ec, k = svc.edge_colors("mesh")
+    for c in range(k):
+        d = e[ec == c][:, 1]
+        assert len(np.unique(d)) == len(d)  # conflict-free scatter class
+
+    svc.remove_graph("rmat")
+    assert svc.graphs() == ["mesh"]
+    with pytest.raises(KeyError):
+        svc.colors("rmat")
+    with pytest.raises(ValueError):
+        svc.add_graph("mesh", gen.mesh2d(4, 4))
+
+
+def test_service_rejects_bad_batch_at_submit():
+    """Regression: a malformed batch must bounce at submit(), not poison
+    the pending queue and livelock step()."""
+    svc = ColoringService(delta_cap=64)
+    svc.add_graph("a", gen.mesh2d(8, 8))
+    with pytest.raises(ValueError):
+        svc.submit("a", inserts=np.array([[0, 10 ** 9]]))
+    assert svc.pending("a") == 0
+    svc.submit("a", inserts=np.array([[0, 10]]))
+    svc.step()                      # queue is healthy; this must not raise
+    assert svc.version("a") == 1
+
+
+def test_service_step_single_graph():
+    svc = ColoringService(delta_cap=64)
+    svc.add_graph("a", gen.mesh2d(8, 8))
+    svc.add_graph("b", gen.mesh2d(8, 8))
+    svc.submit("a", inserts=np.array([[0, 10]]))
+    svc.submit("b", inserts=np.array([[0, 10]]))
+    svc.step("a")
+    assert svc.version("a") == 1 and svc.version("b") == 0
+    assert svc.pending("b") == 1
