@@ -1,4 +1,5 @@
-# CI entry points (see ROADMAP.md "Tier-1 verify" and DESIGN.md §8).
+# CI entry points (see ROADMAP.md "Tier-1 verify" and DESIGN.md §9),
+# enforced on push/PR by .github/workflows/ci.yml.
 #
 #   make test         tier-1 test suite (the gate every PR must keep green)
 #   make bench-smoke  tiny-graph run of every benchmark section — catches

@@ -1,27 +1,77 @@
 """Paper §6 outlook: distance-2 coloring.  G^2 is much denser than G, and
 the paper predicts RSOC's advantage (fewer conflicts/rounds/passes) grows
-with density — we measure exactly that on the mesh classes."""
+with density — we measure exactly that on the mesh classes, and compare the
+native two-hop engine (DESIGN.md §8) against the materialized power_graph
+path on both time and peak working set.
+
+The materialized rows' ``ms`` includes the G² build (paid on every call in
+production); G² is built ONCE per (graph, d) here and shared between the
+degree statistic and every algorithm row — it used to be rebuilt per row.
+"""
 from __future__ import annotations
 
+import numpy as np
+
 from benchmarks.common import Csv, suite, time_fn
-from repro.core.distance2 import color_distance_d
-from repro.graphs.csr import power_graph
+from repro.core import coloring as col
+from repro.core.distance2 import color_distance2
+from repro.graphs.csr import CSRGraph, power_graph
+
+
+def ws_mb_materialized(gd: CSRGraph, ell_cap: int = 512) -> float:
+    """Peak working set of the materialized path: G²'s CSR plus what the
+    coloring loop actually allocates — an ELL capped at ``ell_cap`` columns
+    with hub rows spilling into the COO side-channel (see
+    ``coloring.prepare``)."""
+    W = max(min(gd.max_degree, ell_cap), 1)
+    ell_bytes = gd.n_vertices * W * 4
+    ovf_bytes = int(np.maximum(gd.degrees - W, 0).sum()) * 8   # src+dst int32
+    csr_bytes = gd.indices.nbytes + gd.indptr.nbytes
+    return (ell_bytes + ovf_bytes + csr_bytes) / 2**20
+
+
+def ws_mb_native(g: CSRGraph, n_chunks: int = 16) -> float:
+    """Peak working set of the native path: G's ELL plus one chunk's
+    transient two-hop gather panel (colors + priorities, W + W² wide)."""
+    W = max(g.max_degree, 1)
+    cs = -(-g.n_vertices // n_chunks)
+    ell_bytes = g.n_vertices * W * 4
+    gather_bytes = cs * (W + W * W) * 4 * 2
+    return (ell_bytes + gather_bytes) / 2**20
 
 
 def main(scale: str = "small") -> None:
     graphs = {k: v for k, v in suite(scale).items()
               if k in ("mesh2d", "bmw3_2", "pwtk")}
-    csv = Csv(["graph", "d", "avg_degree_gd", "algo", "ms", "rounds",
-               "gather_passes", "conflicts", "colors"])
+    csv = Csv(["graph", "d", "path", "avg_degree_gd", "algo", "ms", "rounds",
+               "gather_passes", "conflicts", "colors", "ws_mb"])
     for gname, g in graphs.items():
         for d in (1, 2):
-            gd = power_graph(g, d)
-            avg_deg = gd.n_edges / gd.n_vertices
+            build_s, gd = time_fn(power_graph, g, d, repeats=1, warmup=0)
+            avg_deg = gd.n_edges / max(gd.n_vertices, 1)
+            ws_mat = ws_mb_materialized(gd)
+            mat_ms = {}
             for algo in ("cat", "rsoc"):
-                sec, (res, _) = time_fn(color_distance_d, g, d=d,
-                                        algorithm=algo, seed=1, repeats=2)
-                csv.row(gname, d, avg_deg, algo, sec * 1e3, res.n_rounds,
-                        res.gather_passes, res.total_conflicts, res.n_colors)
+                sec, res = time_fn(col.ALGORITHMS[algo], gd, seed=1,
+                                   repeats=2)
+                mat_ms[algo] = (build_s + sec) * 1e3
+                csv.row(gname, d, "materialized", avg_deg, algo,
+                        mat_ms[algo], res.n_rounds, res.gather_passes,
+                        res.total_conflicts, res.n_colors, ws_mat)
+            if d != 2:
+                continue
+            sec, res = time_fn(color_distance2, g, seed=1, repeats=2)
+            nat_ms = sec * 1e3
+            ws_nat = ws_mb_native(g)
+            csv.row(gname, d, "native", avg_deg, "rsoc", nat_ms,
+                    res.n_rounds, res.gather_passes, res.total_conflicts,
+                    res.n_colors, ws_nat)
+            print(f"# native-vs-materialized {gname} d=2: "
+                  f"native {nat_ms:.1f}ms / {ws_nat:.2f}MB ws  vs  "
+                  f"materialized(rsoc) {mat_ms['rsoc']:.1f}ms / "
+                  f"{ws_mat:.2f}MB ws  "
+                  f"(time {mat_ms['rsoc'] / max(nat_ms, 1e-9):.2f}x, "
+                  f"ws {ws_mat / max(ws_nat, 1e-9):.2f}x)", flush=True)
 
 
 if __name__ == "__main__":

@@ -3,7 +3,7 @@
   table1           paper Table 1 + Figs 1-2 (time, speedup, passes)
   conflicts        paper Figs 3-4 + 5-6 (conflicts, rounds vs parallelism)
   colors           color-quality vs serial greedy
-  distance2        paper §6 outlook (G^2 density scaling)
+  distance2        paper §6 outlook (G^2 density; native vs materialized)
   colored_scatter  the technique applied to GNN aggregation
   incremental      dynamic-graph incremental recoloring vs from-scratch
   lm_step          measured smoke-scale LM train-step wall time

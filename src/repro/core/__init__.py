@@ -7,4 +7,7 @@ from repro.core.coloring import (  # noqa: F401
     greedy_sequential, is_proper, n_colors_used,
 )
 from repro.core.frontier import color_rsoc_compact  # noqa: F401
-from repro.core.distance2 import color_distance_d  # noqa: F401
+from repro.core.distance2 import (  # noqa: F401
+    color_bipartite_partial, color_distance2, color_distance_d,
+    is_bipartite_partial_proper, is_distance_d_proper,
+)

@@ -64,6 +64,7 @@ class ColoringResult:
     gather_passes: int             # neighbor-gather sweeps executed (perf proxy)
     final_C: int = 0               # color cap actually used (after doublings)
     retries: int = 0               # cap-doubling re-runs (0 = first cap fit)
+    distance: int = 1              # coloring distance (2 = native two-hop)
 
     def summary(self) -> dict:
         return {"rounds": int(self.n_rounds),
@@ -71,7 +72,8 @@ class ColoringResult:
                 "colors": int(self.n_colors),
                 "gather_passes": int(self.gather_passes),
                 "final_C": int(self.final_C),
-                "retries": int(self.retries)}
+                "retries": int(self.retries),
+                "distance": int(self.distance)}
 
 
 def is_proper(g: CSRGraph, colors: np.ndarray) -> bool:

@@ -1,25 +1,318 @@
-"""Distance-d coloring (paper §6 outlook).
+"""Distance-2 coloring: native fused two-hop engine + materialized oracle.
 
-The paper argues RSOC's advantage grows with graph density, making it the
-better candidate for d-distance colorings where G^d is much denser than G.
-We validate exactly that: color G^d = power graph of G and compare RSOC vs CAT
-round/pass counts (benchmarks/bench_distance2.py).
+The paper's §6 outlook argues RSOC's edge over CAT grows with density, making
+it the natural engine for distance-2 coloring — but materializing G² costs
+|E(G²)| ≈ n·deg² memory plus a full ELL conversion per call, which rules out
+exactly the dense workloads where the prediction bites.  The native engine
+here colors G² *without ever constructing it*: one fused **two-hop gather
+pass** walks the ELL tile twice (for each vertex: neighbor colors, then each
+neighbor's own ELL row) and feeds a single (rows, C) forbidden table, wired
+into the same speculative detect-and-recolor loop as distance-1 RSOC
+(``coloring._chunked_pass``-style chunking, ``frontier._compact_repair``
+frontier compaction).  Working set per round: n·W + chunk·W² gathered words
+instead of n·W² resident ELL — and no G² CSR ever exists.
+
+Semantics: vertex v's forbidden set is the colors of every u ≠ v within
+distance ≤ 2; defects are broken asymmetrically by the same hashed priority
+as distance-1 (of a conflicting pair only the lower-priority endpoint
+re-colors), so the termination argument of ``coloring.py`` carries over
+verbatim — the conflict graph is G², not G, but the highest-priority
+defective vertex still becomes permanently stable each round.
+
+``color_bipartite_partial`` is the Jacobian-compression entry point
+(Çatalyürek et al., arXiv:1205.3809; Taş & Kaya, arXiv:1701.02628):
+distance-2 color only one side of a bipartite graph.  It is the same two-hop
+pass restricted to a row mask — hop-1 neighbors (the other side) stay
+uncolored, so only the two-hop (same-side, shared-neighbor) colors bite.
+
+The materialized ``power_graph`` path is kept as the oracle
+(``color_distance_d`` / ``is_distance_d_proper``); the native path requires
+the full adjacency in ELL (no overflow side-channel — a two-hop walk through
+a spilled COO edge would silently miss constraints) and raises when
+``max_degree > ell_cap``.
+
+The Pallas expression of the two-hop pass is ``kernels/twohop.py``
+(dispatched via ``kernels.ops.twohop``); this module is the jnp reference
+engine, bit-matched by the kernel parity tests.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs.csr import CSRGraph, power_graph
+from repro.graphs.csr import CSRGraph, power_graph, to_edge_list
 from repro.core import coloring as col
+from repro.core import frontier as fr
 
+
+# --------------------------------------------------------------------------
+# materialized oracle path (kept: the ground truth the native engine is
+# differentially tested against)
+# --------------------------------------------------------------------------
 
 def color_distance_d(g: CSRGraph, d: int = 2, algorithm: str = "rsoc",
                      **kwargs) -> tuple[col.ColoringResult, CSRGraph]:
+    """Color G^d by materializing the power graph (oracle path)."""
     gd = power_graph(g, d)
     fn = col.ALGORITHMS[algorithm]
-    res = fn(gd, **kwargs)
+    res = dataclasses.replace(fn(gd, **kwargs), distance=d)
     return res, gd
 
 
 def is_distance_d_proper(g: CSRGraph, colors: np.ndarray, d: int) -> bool:
     return col.is_proper(power_graph(g, d), colors)
+
+
+def is_bipartite_partial_proper(g: CSRGraph, n_left: int,
+                                colors: np.ndarray) -> bool:
+    """Proper one-sided distance-2 coloring: every pair of left vertices
+    (ids < n_left) sharing a neighbor has distinct colors, all colored."""
+    colors = np.asarray(colors)
+    if (colors[:n_left] < 0).any():
+        return False
+    e = to_edge_list(power_graph(g, 2))
+    sel = (e[:, 0] < n_left) & (e[:, 1] < n_left)
+    e = e[sel]
+    if len(e) == 0:
+        return True
+    return bool((colors[e[:, 0]] != colors[e[:, 1]]).all())
+
+
+def bipartite_partial_oracle(g: CSRGraph, n_left: int) -> np.ndarray:
+    """Serial greedy one-sided distance-2 coloring (host-side numpy oracle,
+    the partial-coloring analogue of ``coloring.greedy_sequential``)."""
+    colors = np.full(n_left, -1, dtype=np.int32)
+    for v in range(n_left):
+        used = set()
+        for w in g.neighbors(v):
+            for x in g.neighbors(w):
+                if x != v and x < n_left and colors[x] >= 0:
+                    used.add(int(colors[x]))
+        c = 0
+        while c in used:
+            c += 1
+        colors[v] = c
+    return colors
+
+
+# --------------------------------------------------------------------------
+# native engine: fused two-hop gather
+# --------------------------------------------------------------------------
+
+def _twohop_gather(ell, colors, pri, row_ids, n_pad):
+    """Colors/priorities of every vertex within two hops of each row.
+
+    Returns (allc, allp), both (R, W + W²): hop-1 neighbor colors followed by
+    hop-2 colors gathered through each neighbor's own ELL row.  Dead slots
+    and the row vertex itself (always its own two-hop neighbor through any
+    neighbor) carry -1, so they never forbid a color or flag a defect.
+    """
+    W = ell.shape[1]
+    safe_rows = jnp.clip(row_ids, 0, n_pad - 1)
+    e1 = ell[safe_rows]                               # (R, W) hop-1 ids
+    live1 = e1 >= 0
+    s1 = jnp.clip(e1, 0, n_pad - 1)
+    nc1 = jnp.where(live1, colors[s1], -1)
+    np1 = jnp.where(live1, pri[s1], -1)
+    e2 = ell[s1.reshape(-1)].reshape(-1, W * W)       # (R, W²) hop-2 ids
+    live2 = (jnp.repeat(live1, W, axis=1) & (e2 >= 0)
+             & (e2 != row_ids[:, None]))              # self-exclusion
+    s2 = jnp.clip(e2, 0, n_pad - 1)
+    nc2 = jnp.where(live2, colors[s2], -1)
+    np2 = jnp.where(live2, pri[s2], -1)
+    return (jnp.concatenate([nc1, nc2], axis=1),
+            jnp.concatenate([np1, np2], axis=1))
+
+
+def _d2_chunked_pass(p_static, ell, pri, rows_mask, colors, U, force, *,
+                     detect: bool):
+    """One sequential two-hop sweep over n_chunks chunks.
+
+    The distance-2 mirror of ``coloring._chunked_pass`` (same fused
+    detect-and-recolor contract, fresh colors across chunks) with the
+    neighbor gather replaced by the two-hop gather.  ``rows_mask`` is the
+    set of rows that participate at all — ``arange < n`` for plain
+    distance-2, the left-side mask for bipartite partial coloring.
+    Returns (colors, recolored_mask, n_defects, overflowed).
+    """
+    n, n_pad, C, n_chunks = p_static
+    cs = n_pad // n_chunks
+
+    def chunk_body(k, carry):
+        colors, recolored, n_def, ovf = carry
+        lo = k * cs
+        row_ids = lo + jnp.arange(cs, dtype=jnp.int32)
+        U_k = jax.lax.dynamic_slice_in_dim(U, lo, cs, 0)
+        force_k = jax.lax.dynamic_slice_in_dim(force, lo, cs, 0)
+        valid_k = jax.lax.dynamic_slice_in_dim(rows_mask, lo, cs, 0)
+        c_k = jax.lax.dynamic_slice_in_dim(colors, lo, cs, 0)
+        pri_k = jax.lax.dynamic_slice_in_dim(pri, lo, cs, 0)
+        allc, allp = _twohop_gather(ell, colors, pri, row_ids, n_pad)
+        if detect:
+            defect = ((allc == c_k[:, None]) & (c_k[:, None] >= 0)
+                      & (allp > pri_k[:, None])).any(axis=1)
+            work = valid_k & ((U_k & defect) | force_k)
+            n_def = n_def + (valid_k & U_k & defect).sum(dtype=jnp.int32)
+        else:
+            work = valid_k & (U_k | force_k)
+        forb = col._forbidden_from_nbrc(allc, C)
+        mex, ovf_k = col._mex(forb)
+        newc = jnp.where(work, mex, c_k)
+        colors = jax.lax.dynamic_update_slice_in_dim(colors, newc, lo, 0)
+        recolored = jax.lax.dynamic_update_slice_in_dim(recolored, work, lo, 0)
+        return colors, recolored, n_def, ovf | (ovf_k & work).any()
+
+    init = (colors, jnp.zeros((n_pad,), bool), jnp.int32(0), jnp.bool_(False))
+    return jax.lax.fori_loop(0, n_chunks, chunk_body, init)
+
+
+def _d2_compact_pass(p_static, ell, pri, colors, idx, idx_valid):
+    """Two-hop fused pass over a compacted frontier-index buffer (the
+    distance-2 mirror of ``frontier._compact_pass``): gathers only the
+    ≤ cap frontier rows, so repair rounds pay cap·W² instead of n·W²."""
+    n, n_pad_s, C, n_chunks = p_static
+    cap = idx.shape[0]
+    cs = cap // n_chunks
+    n_pad = colors.shape[0]
+
+    def chunk_body(k, carry):
+        colors, recolored, n_def, ovf = carry
+        lo = k * cs
+        ids = jax.lax.dynamic_slice_in_dim(idx, lo, cs, 0)
+        live = jax.lax.dynamic_slice_in_dim(idx_valid, lo, cs, 0)
+        ids_c = jnp.clip(ids, 0, n_pad - 1)
+        c_k = colors[ids_c]
+        pri_k = pri[ids_c]
+        allc, allp = _twohop_gather(ell, colors, pri, ids_c, n_pad)
+        defect = ((allc == c_k[:, None]) & (c_k[:, None] >= 0)
+                  & (allp > pri_k[:, None])).any(axis=1) & live
+        work = defect | (live & (c_k < 0))
+        n_def = n_def + defect.sum(dtype=jnp.int32)
+        forb = col._forbidden_from_nbrc(allc, C)
+        mex, o = col._mex(forb)
+        # dead slots carry idx == n_pad: out-of-bounds -> dropped
+        colors = colors.at[ids].set(jnp.where(work, mex, c_k), mode="drop")
+        recolored = recolored.at[ids].max(work, mode="drop")
+        return colors, recolored, n_def, ovf | (o & work).any()
+
+    init = (colors, jnp.zeros((n_pad,), bool), jnp.int32(0), jnp.bool_(False))
+    return jax.lax.fori_loop(0, n_chunks, chunk_body, init)
+
+
+@functools.partial(jax.jit, static_argnames=("p_static", "cap", "max_rounds"))
+def _d2_loop(ell, pri, rows_mask, p_static, cap, max_rounds):
+    """Round 0 (tentative two-hop coloring of every masked row) followed by
+    the frontier-compacted fused repair, with two-hop passes plugged into
+    ``frontier._compact_repair``."""
+    n, n_pad, C, n_chunks = p_static
+    colors0 = jnp.full((n_pad,), -1, jnp.int32)
+    zeros = jnp.zeros((n_pad,), bool)
+    colors1, U, _, ovf0 = _d2_chunked_pass(
+        p_static, ell, pri, rows_mask, colors0, zeros, rows_mask,
+        detect=False)
+
+    def pass_small(colors, idx, idx_valid):
+        return _d2_compact_pass(p_static, ell, pri, colors, idx, idx_valid)
+
+    def pass_big(colors, U, force):
+        return _d2_chunked_pass(p_static, ell, pri, rows_mask, colors, U,
+                                force, detect=True)
+
+    colors, r, trace, tot, ovf = fr._compact_repair(
+        p_static, cap, pass_small, pass_big, colors1, U, max_rounds, ovf0)
+    return colors, r, trace, tot, ovf
+
+
+# --------------------------------------------------------------------------
+# native engine: drivers
+# --------------------------------------------------------------------------
+
+def _pick_C_d2(g: CSRGraph, C: Optional[int]) -> int:
+    if C is not None:
+        return int(C)
+    # distance-2 degree is bounded by deg² but typically far smaller
+    # (neighborhoods overlap); start modest, cap-doubling retries cover hubs.
+    c = min(g.max_degree * g.max_degree + 2, 256)
+    return int(max(32, -(-c // 32) * 32))
+
+
+def _prepare_native(g: CSRGraph, seed: int, n_chunks: int, C: Optional[int],
+                    relabel: bool, ell_cap: int) -> col.ColoringProblem:
+    if g.max_degree > ell_cap:
+        raise ValueError(
+            f"native distance-2 needs the full adjacency in ELL: max_degree "
+            f"{g.max_degree} > ell_cap {ell_cap} (two-hop walks cannot cross "
+            f"the COO overflow side-channel; use color_distance_d instead)")
+    prob = col.prepare(g, seed, n_chunks, ell_cap=max(g.max_degree, 1),
+                       C=_pick_C_d2(g, C), relabel=relabel)
+    assert prob.ovf_src.shape[0] == 0
+    return prob
+
+
+def _run_d2_with_retry(prob: col.ColoringProblem, rows_mask, n_chunks: int,
+                       cap: int, max_rounds: int):
+    C = prob.C
+    retries = 0
+    while True:
+        p_static = (prob.n, prob.n_pad, C, n_chunks)
+        out = _d2_loop(prob.ell, prob.pri, rows_mask, p_static, cap,
+                       max_rounds)
+        if not bool(out[-1]):
+            return out, C, retries
+        C *= 2  # rare: color cap exceeded -> retry with doubled cap
+        retries += 1
+
+
+def _d2_result(colors, r, trace, tot, final_C, retries) -> col.ColoringResult:
+    return col.ColoringResult(
+        colors=colors, n_rounds=int(r),
+        conflicts_per_round=np.asarray(trace), total_conflicts=int(tot),
+        n_colors=col.n_colors_used(colors), overflow=retries > 0,
+        gather_passes=1 + int(r), final_C=final_C, retries=retries,
+        distance=2)
+
+
+def color_distance2(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
+                    n_chunks: int = 16, max_rounds: int = 1000,
+                    ell_cap: int = 512, relabel: bool = True,
+                    frontier_frac: float = 0.125) -> col.ColoringResult:
+    """Native distance-2 RSOC: fused two-hop gather, G² never materialized."""
+    prob = _prepare_native(g, seed, n_chunks, C, relabel, ell_cap)
+    cap = fr.frontier_cap(prob.n_pad, n_chunks, frontier_frac)
+    rows_mask = jnp.arange(prob.n_pad) < prob.n
+    (colors, r, trace, tot, _), final_C, retries = _run_d2_with_retry(
+        prob, rows_mask, n_chunks, cap, max_rounds)
+    colors = col._unpermute(colors, prob.perm, prob.n)
+    return _d2_result(colors, r, trace, tot, final_C, retries)
+
+
+def color_bipartite_partial(g: CSRGraph, n_left: int, seed: int = 0,
+                            C: Optional[int] = None, n_chunks: int = 16,
+                            max_rounds: int = 1000, ell_cap: int = 512,
+                            relabel: bool = True,
+                            frontier_frac: float = 0.125
+                            ) -> col.ColoringResult:
+    """One-sided distance-2 coloring of a bipartite graph (Jacobian
+    compression): color only the left side [0, n_left) so that any two left
+    vertices sharing a neighbor get distinct colors.
+
+    Same two-hop engine restricted to the left-side row mask; right-side
+    vertices stay uncolored, so their (hop-1) contributions are inert and
+    only shared-neighbor (hop-2) colors constrain.  Returns a result whose
+    ``colors`` has length ``n_left``.
+    """
+    if not 0 < n_left <= g.n_vertices:
+        raise ValueError(f"n_left {n_left} out of range for n={g.n_vertices}")
+    prob = _prepare_native(g, seed, n_chunks, C, relabel, ell_cap)
+    cap = fr.frontier_cap(prob.n_pad, n_chunks, frontier_frac)
+    mask_np = np.zeros(prob.n_pad, dtype=bool)
+    mask_np[prob.perm[:n_left]] = True        # left side, relabeled space
+    (colors, r, trace, tot, _), final_C, retries = _run_d2_with_retry(
+        prob, jnp.asarray(mask_np), n_chunks, cap, max_rounds)
+    colors = col._unpermute(colors, prob.perm, prob.n)[:n_left]
+    return _d2_result(colors, r, trace, tot, final_C, retries)

@@ -105,7 +105,20 @@ def _compact_pass(p_static, ell, osrc, odst, pri, colors, idx, idx_valid):
     return jax.lax.fori_loop(0, n_chunks, chunk_body, init)
 
 
-def _compact_repair(p_static, cap, ell, osrc, odst, pri, colors, U,
+def _d1_passes(p_static, ell, osrc, odst, pri):
+    """The distance-1 (pass_small, pass_big) pair for ``_compact_repair``."""
+    def pass_small(colors, idx, idx_valid):
+        return _compact_pass(p_static, ell, osrc, odst, pri, colors,
+                             idx, idx_valid)
+
+    def pass_big(colors, U, force):
+        return col._chunked_pass(p_static, ell, osrc, odst, pri, colors,
+                                 U, force, detect=True)
+
+    return pass_small, pass_big
+
+
+def _compact_repair(p_static, cap, pass_small, pass_big, colors, U,
                     max_rounds, ovf0=False):
     """Frontier-compacted fused repair from an arbitrary (colors, U) start.
 
@@ -113,6 +126,12 @@ def _compact_repair(p_static, cap, ell, osrc, odst, pri, colors, U,
     U_{r+1} = recolored_r, terminates on a zero-defect pass) but each pass
     gathers only the ≤ cap compacted frontier rows; rounds whose frontier
     exceeds ``cap`` fall back to the full-width pass.
+
+    The driver is engine-agnostic (the distance-2 engine in
+    ``core/distance2.py`` supplies two-hop passes): ``pass_small(colors,
+    idx, idx_valid)`` recolors the ≤ cap compacted frontier rows,
+    ``pass_big(colors, U, force)`` is the full-width fallback; both return
+    (colors, recolored_mask, n_defects, cap_overflowed).
     """
     n, n_pad, C, n_chunks = p_static
 
@@ -130,13 +149,11 @@ def _compact_repair(p_static, cap, ell, osrc, odst, pri, colors, U,
 
         def small(_):
             idx, live = compact(U)
-            return _compact_pass(p_static, ell, osrc, odst, pri, colors,
-                                 idx, live)
+            return pass_small(colors, idx, live)
 
         def big(_):
             force = U & (colors < 0)
-            return col._chunked_pass(p_static, ell, osrc, odst, pri, colors,
-                                     U, force, detect=True)
+            return pass_big(colors, U, force)
 
         colors2, recolored, n_def, ovf2 = jax.lax.cond(
             count <= cap, small, big, None)
@@ -163,8 +180,9 @@ def _rsoc_compact_loop(ell, osrc, odst, pri, p_static, cap, max_rounds):
     # round 0: full-width chunked coloring (everyone needs a color anyway)
     colors1, U, _, ovf0 = col._chunked_pass(
         p_static, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
+    pass_small, pass_big = _d1_passes(p_static, ell, osrc, odst, pri)
     colors, r, trace, tot, ovf = _compact_repair(
-        p_static, cap, ell, osrc, odst, pri, colors1, U, max_rounds, ovf0)
+        p_static, cap, pass_small, pass_big, colors1, U, max_rounds, ovf0)
     return colors[:n], r, trace, tot, ovf
 
 
@@ -173,7 +191,8 @@ def _repair_compact_loop(ell, osrc, odst, pri, colors, U, p_static, cap,
                          max_rounds):
     """Externally-seeded compacted repair (no round 0): the incremental
     recoloring entry point.  Returns full-length (n_pad) colors."""
-    return _compact_repair(p_static, cap, ell, osrc, odst, pri, colors, U,
+    pass_small, pass_big = _d1_passes(p_static, ell, osrc, odst, pri)
+    return _compact_repair(p_static, cap, pass_small, pass_big, colors, U,
                            max_rounds)
 
 

@@ -15,7 +15,7 @@ We regenerate the same *classes* synthetically (UF downloads are unavailable
 offline): structured triangulations for the 2D mesh, tetrahedralized grids for
 the 3D meshes, and a faithful R-MAT sampler.  Sizes are parameterized; the
 benchmark suite defaults to scaled-down instances sized for this container and
-records the scale factor (DESIGN.md §8.5).
+records the scale factor (DESIGN.md §9.5).
 """
 from __future__ import annotations
 
@@ -113,6 +113,34 @@ def mesh3d(nx: int, ny: int, nz: int) -> CSRGraph:
             for y in range(x + 1, 4):
                 edges.append(np.stack([t[x], t[y]], 1))
     return from_edges(nx * ny * nz, np.concatenate(edges, axis=0))
+
+
+def bipartite_random(n_left: int, n_right: int, avg_left_degree: float = 4.0,
+                     seed: int = 0) -> CSRGraph:
+    """Random bipartite graph: vertices [0, n_left) are the left side,
+    [n_left, n_left + n_right) the right; edges only cross sides.
+
+    The Jacobian-sparsity analogue (left = columns, right = rows, edge =
+    structural nonzero) driving ``core.distance2.color_bipartite_partial``.
+    """
+    rng = np.random.default_rng(seed)
+    m = int(n_left * avg_left_degree)
+    src = rng.integers(0, n_left, size=m)
+    dst = n_left + rng.integers(0, n_right, size=m)
+    return from_edges(n_left + n_right, np.stack([src, dst], axis=1))
+
+
+def bipartite_banded(n_left: int, n_right: int, band: int = 3) -> CSRGraph:
+    """Banded Jacobian sparsity pattern (1-D stencil discretization): column
+    j hits the rows within ``band`` of its scaled diagonal position."""
+    j = np.arange(n_left)
+    diag = (j * n_right) // max(n_left, 1)
+    blocks = []
+    for off in range(-band, band + 1):
+        i = diag + off
+        ok = (i >= 0) & (i < n_right)
+        blocks.append(np.stack([j[ok], n_left + i[ok]], axis=1))
+    return from_edges(n_left + n_right, np.concatenate(blocks, axis=0))
 
 
 def erdos_renyi(n: int, avg_degree: float, seed: int = 0) -> CSRGraph:

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.firstfit import firstfit as _firstfit_pallas
 from repro.kernels.detect_recolor import detect_recolor as _dr_pallas
+from repro.kernels.twohop import twohop_detect_recolor as _twohop_pallas
 from repro.kernels.ell_spmm import ell_spmm as _spmm_pallas
 from repro.kernels.flash_attention import flash_attention as _fa_pallas
 
@@ -45,6 +46,22 @@ def detect_recolor(ell, colors, pri, U_rows, row_start: int, C: int = 64,
     interp = b == "pallas_interpret"
     return _dr_pallas(ell, colors, pri, U_rows, row_start=row_start, C=C,
                       interpret=interp, **kw)
+
+
+def twohop(ell_rows, ell_all, colors, pri, U_rows, row_start: int,
+           C: int = 64, backend: str = "auto", **kw):
+    """Fused two-hop (distance-2) detect-and-recolor for rows
+    [row_start, row_start + R).  Falls back to jnp when the full ELL table
+    would not fit VMEM (n_all * W * 4 > ~8MB)."""
+    b = _resolve(backend)
+    if b == "pallas" and ell_all.size * 4 > 8 * 2**20:
+        b = "jnp"
+    if b == "jnp":
+        return ref.twohop_ref(ell_rows, ell_all, colors, pri, row_start,
+                              U_rows, C)
+    interp = b == "pallas_interpret"
+    return _twohop_pallas(ell_rows, ell_all, colors, pri, U_rows,
+                          row_start=row_start, C=C, interpret=interp, **kw)
 
 
 def ell_aggregate(ell, feats, op: str = "sum", backend: str = "auto", **kw):

@@ -54,6 +54,48 @@ def detect_recolor_ref(ell, colors, pri, row_start: int, U_rows, C: int):
 
 
 # --------------------------------------------------------------------------
+# fused two-hop detect-and-recolor (native distance-2, one chunk)
+# --------------------------------------------------------------------------
+
+def twohop_ref(ell_rows, ell_all, colors, pri, row_start: int, U_rows, C: int):
+    """Distance-2 analogue of ``detect_recolor_ref``: the forbidden set and
+    the defect test read the colors of every vertex reachable in one or two
+    hops — hop 2 re-gathers each neighbor's ELL row from ``ell_all``, so
+    G²'s adjacency is consumed on the fly, never materialized.  A vertex is
+    its own two-hop neighbor through any neighbor and is excluded.
+
+    ell_rows: (R, W) neighbor tile for rows [row_start, row_start+R)
+    ell_all:  (n_all, W) full neighbor table (hop-2 source), n_all >= n
+    colors:   (n,) global colors;  pri: (n,) priorities;  U_rows: (R,) bool
+    returns (new row colors (R,), recolored (R,) bool, overflow (R,) bool)
+    """
+    n = colors.shape[0]
+    R, W = ell_rows.shape
+    vid = row_start + jnp.arange(R, dtype=jnp.int32)
+    c_r = colors[vid]
+    p_r = pri[vid]
+    live1 = ell_rows >= 0
+    safe1 = jnp.clip(ell_rows, 0, n - 1)
+    nc1 = jnp.where(live1, colors[safe1], -1)
+    np1 = jnp.where(live1, pri[safe1], -1)
+    e2 = ell_all[safe1].reshape(R, W * W)              # hop-2 ids
+    live2 = (jnp.repeat(live1, W, axis=1) & (e2 >= 0)
+             & (e2 != vid[:, None]))                   # self-exclusion
+    s2 = jnp.clip(e2, 0, n - 1)
+    nc2 = jnp.where(live2, colors[s2], -1)
+    np2 = jnp.where(live2, pri[s2], -1)
+    allc = jnp.concatenate([nc1, nc2], axis=1)
+    allp = jnp.concatenate([np1, np2], axis=1)
+    defect = ((allc == c_r[:, None]) & (c_r[:, None] >= 0)
+              & (allp > p_r[:, None])).any(axis=1)
+    work = U_rows & defect
+    forb = (allc[:, :, None] == jnp.arange(C)[None, None, :]).any(axis=1)
+    mex = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
+    newc = jnp.where(work, mex, c_r)
+    return newc, work, forb.all(axis=1) & work
+
+
+# --------------------------------------------------------------------------
 # ELL aggregation (GNN message passing over padded neighbor tiles)
 # --------------------------------------------------------------------------
 

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: fused two-hop detect-and-recolor (native distance-2).
+
+Two nested W-loops over the (BV, W) ELL tile feed ONE (BV, C) forbidden
+table: hop 1 gathers each row's neighbor colors, hop 2 re-gathers every
+neighbor's own ELL row from the full table — so G²'s adjacency is consumed
+on the fly inside VMEM and never materialized (|E(G²)| ≈ n·deg² would not
+fit anyway).  The same gathered colors feed both the distance-2 defect test
+(same color as a higher-priority vertex within two hops) and the first-fit
+recolor: the distance-2 expression of merging Alg. 2's phases into Alg. 3's
+single fused phase.
+
+A vertex is always its own two-hop neighbor (v -> w -> v through any
+neighbor w); those slots are masked so a row never forbids its own color.
+
+The full ELL table and the color/priority vectors are VMEM-resident per
+invocation (same residency envelope as firstfit.py: graphs to ~1M rows at
+mesh widths; beyond that the ops.py wrapper falls back to the jnp path).
+
+Grid: one program per BV-row block of the chunk being recolored.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _twohop_kernel(ell_ref, ell_all_ref, colors_ref, pri_ref, U_ref,
+                   rowc_ref, rowp_ref, rowid_ref,
+                   newc_ref, rec_ref, ovf_ref, *, C: int, n: int):
+    ell = ell_ref[...]                        # (BV, W) rows being recolored
+    ell_all = ell_all_ref[...]                # (n_all, W) hop-2 source table
+    colors = colors_ref[...]                  # (n,)
+    pri = pri_ref[...]                        # (n,)
+    U = U_ref[...]                            # (BV,)
+    c_r = rowc_ref[...]                       # (BV,) this block's colors
+    p_r = rowp_ref[...]                       # (BV,)
+    vid = rowid_ref[...]                      # (BV,) global ids (self-mask)
+    BV, W = ell.shape
+
+    def hop1(j, carry):
+        forb, defect = carry
+        idx = ell[:, j]
+        live = idx >= 0
+        safe = jnp.clip(idx, 0, n - 1)
+        nc = jnp.where(live, colors[safe], -1)
+        npr = jnp.where(live, pri[safe], -1)
+        defect = defect | ((nc == c_r) & (c_r >= 0) & (npr > p_r))
+        forb = forb | (nc[:, None]
+                       == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1))
+        row2 = ell_all[safe]                  # (BV, W) two-hop ids via nbr j
+
+        def hop2(jj, carry2):
+            forb2, defect2 = carry2
+            idx2 = row2[:, jj]
+            live2 = live & (idx2 >= 0) & (idx2 != vid)
+            safe2 = jnp.clip(idx2, 0, n - 1)
+            nc2 = jnp.where(live2, colors[safe2], -1)
+            np2 = jnp.where(live2, pri[safe2], -1)
+            defect2 = defect2 | ((nc2 == c_r) & (c_r >= 0) & (np2 > p_r))
+            forb2 = forb2 | (nc2[:, None]
+                             == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1))
+            return forb2, defect2
+
+        return jax.lax.fori_loop(0, W, hop2, (forb, defect))
+
+    forb, defect = jax.lax.fori_loop(
+        0, W, hop1,
+        (jnp.zeros((BV, C), jnp.bool_), jnp.zeros((BV,), jnp.bool_)))
+    work = U & defect
+    mex = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
+    newc_ref[...] = jnp.where(work, mex, c_r)
+    rec_ref[...] = work
+    ovf_ref[...] = forb.all(axis=1) & work
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("C", "row_start", "block_rows",
+                                    "interpret"))
+def twohop_detect_recolor(ell_rows, ell_all, colors, pri, U_rows,
+                          row_start: int, C: int = 64, block_rows: int = 128,
+                          interpret: bool = True):
+    """Fused two-hop pass for rows [row_start, row_start + R).
+
+    ell_rows: (R, W) neighbor tile for those rows
+    ell_all:  (n_all, W) full neighbor table (hop-2 gathers), n_all >= n
+    colors:   (n,) global colors;  pri: (n,) priorities
+    U_rows:   (R,) bool, in-frontier mask for those rows
+    Returns (new row colors (R,), recolored (R,), overflow (R,)).
+    """
+    R, W = ell_rows.shape
+    n = colors.shape[0]
+    n_all = ell_all.shape[0]
+    assert R % block_rows == 0, (R, block_rows)
+    rowc = jax.lax.dynamic_slice_in_dim(colors, row_start, R, 0)
+    rowp = jax.lax.dynamic_slice_in_dim(pri, row_start, R, 0)
+    rowid = row_start + jnp.arange(R, dtype=jnp.int32)
+    grid = (R // block_rows,)
+    kernel = functools.partial(_twohop_kernel, C=C, n=n)
+    blk = lambda: pl.BlockSpec((block_rows,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, W), lambda i: (i, 0)),   # row tile
+            pl.BlockSpec((n_all, W), lambda i: (0, 0)),        # full ELL
+            pl.BlockSpec((n,), lambda i: (0,)),                # colors
+            pl.BlockSpec((n,), lambda i: (0,)),                # priorities
+            blk(), blk(), blk(), blk(),
+        ],
+        out_specs=[blk(), blk(), blk()],
+        out_shape=[
+            jax.ShapeDtypeStruct((R,), jnp.int32),
+            jax.ShapeDtypeStruct((R,), jnp.bool_),
+            jax.ShapeDtypeStruct((R,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(ell_rows, ell_all, colors, pri, U_rows, rowc, rowp, rowid)

@@ -10,6 +10,7 @@ from repro.kernels.firstfit import firstfit
 from repro.kernels.detect_recolor import detect_recolor
 from repro.kernels.ell_spmm import ell_spmm
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.twohop import twohop_detect_recolor
 
 
 def _rand_ell(rng, R, W, n, frac_fill=0.3):
@@ -48,6 +49,64 @@ def test_detect_recolor_matches_ref(R, W, n, C, row_start):
                                   args[3], C)
     for g, w, name in zip(got, want, ("newc", "recolored", "ovf")):
         np.testing.assert_array_equal(g, w, err_msg=name)
+
+
+@pytest.mark.parametrize("R,W,n,C,row_start", [
+    (128, 4, 512, 32, 0), (128, 8, 512, 64, 128), (256, 2, 1024, 32, 256),
+    (128, 6, 128, 32, 0),        # rows == whole table (self-heavy)
+])
+def test_twohop_matches_ref(R, W, n, C, row_start):
+    """Fused two-hop kernel vs jnp oracle, bit-for-bit."""
+    rng = np.random.default_rng(R * W + C)
+    ell_all = _rand_ell(rng, n, W, n)
+    ell_rows = ell_all[row_start:row_start + R]
+    colors = rng.integers(0, C // 2, size=(n,)).astype(np.int32)
+    pri = rng.permutation(n).astype(np.int32)
+    U = rng.random(R) < 0.7
+    args = (jnp.asarray(ell_rows), jnp.asarray(ell_all), jnp.asarray(colors),
+            jnp.asarray(pri), jnp.asarray(U))
+    got = twohop_detect_recolor(*args, row_start=row_start, C=C,
+                                interpret=True)
+    want = ref.twohop_ref(args[0], args[1], args[2], args[3], row_start,
+                          args[4], C)
+    for g, w, name in zip(got, want, ("newc", "recolored", "ovf")):
+        np.testing.assert_array_equal(g, w, err_msg=name)
+
+
+@pytest.mark.parametrize("kernel", ["firstfit", "detect_recolor", "twohop"])
+def test_kernel_backends_agree_under_saturation(kernel):
+    """pallas_interpret vs jnp backends agree bit-for-bit through the ops
+    dispatch layer, on inputs dense enough that the forbidden set saturates
+    C on some rows — the overflow (ovf) flags must match too, and fire."""
+    rng = np.random.default_rng(
+        {"firstfit": 11, "detect_recolor": 22, "twohop": 33}[kernel])
+    n, W, R, C = 512, 16, 256, 4
+    ell_all = _rand_ell(rng, n, W, n, frac_fill=0.05)
+    colors = rng.integers(0, C, size=(n,)).astype(np.int32)
+    pri = rng.permutation(n).astype(np.int32)
+    U = np.ones(R, bool)
+    if kernel == "firstfit":
+        a = ops.firstfit(jnp.asarray(ell_all[:R]), jnp.asarray(colors), C=C,
+                         backend="jnp")
+        b = ops.firstfit(jnp.asarray(ell_all[:R]), jnp.asarray(colors), C=C,
+                         backend="pallas_interpret")
+        ovf = a[1]
+    elif kernel == "detect_recolor":
+        args = (jnp.asarray(ell_all[:R]), jnp.asarray(colors),
+                jnp.asarray(pri), jnp.asarray(U))
+        a = ops.detect_recolor(*args, row_start=0, C=C, backend="jnp")
+        b = ops.detect_recolor(*args, row_start=0, C=C,
+                               backend="pallas_interpret")
+        ovf = a[2]
+    else:
+        args = (jnp.asarray(ell_all[:R]), jnp.asarray(ell_all),
+                jnp.asarray(colors), jnp.asarray(pri), jnp.asarray(U))
+        a = ops.twohop(*args, row_start=0, C=C, backend="jnp")
+        b = ops.twohop(*args, row_start=0, C=C, backend="pallas_interpret")
+        ovf = a[2]
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert np.asarray(ovf).any(), "saturation case must trip ovf flags"
 
 
 @pytest.mark.parametrize("op", ["sum", "mean", "max"])

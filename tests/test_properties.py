@@ -1,0 +1,254 @@
+"""Differential / property harness: every registered algorithm
+(``coloring.ALGORITHMS``) plus the native distance-2 paths, cross-checked
+against the serial oracles (``greedy_sequential`` on G and on the
+materialized ``power_graph``) over RMAT, mesh, and bipartite families.
+
+Invariants swept: properness, the greedy color bound, determinism under a
+fixed seed, vertex-relabel invariance (properness always; color counts stay
+in the same quality band — exact counts may shift because the engines
+compose their own internal relabel with the external one), and the native
+distance-2 engine never materializing G².
+
+Hypothesis-optional with a seeded-numpy fallback, like tests/test_coloring.py
+(the container has no network; hard-requiring hypothesis would make the
+module uncollectable)."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import coloring as col
+from repro.core import distance2 as d2
+from repro.graphs import generators as gen
+from repro.graphs.csr import from_edges, power_graph, shuffle_vertices
+
+
+GRAPHS = {
+    "rmat_b": gen.rmat_b(9, edge_factor=8),
+    "mesh2d": gen.mesh2d(20, 20),
+    "mesh3d": gen.mesh3d(6, 6, 6),
+    "bipartite": gen.bipartite_random(300, 200, 4.0, seed=7),
+}
+ALGOS = sorted(col.ALGORITHMS)
+
+
+def _star(n):
+    return from_edges(n, np.stack(
+        [np.zeros(n - 1, np.int64), np.arange(1, n, dtype=np.int64)], 1))
+
+
+# --------------------------------------------------------------------------
+# distance-1: every algorithm vs the serial oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("algo", ALGOS)
+def test_differential_proper_vs_oracle(gname, algo):
+    g = GRAPHS[gname]
+    res = col.ALGORITHMS[algo](g, seed=7)
+    assert col.is_proper(g, res.colors), f"{algo} defective on {gname}"
+    assert res.n_colors <= g.max_degree + 1
+    serial = col.n_colors_used(col.greedy_sequential(g))
+    # same quality band as serial; the absolute floor covers low-chromatic
+    # families (bipartite: serial greedy finds 2, speculative coloring ~6)
+    assert res.n_colors <= max(serial * 1.5 + 2, 8)
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("algo", ALGOS)
+def test_determinism_under_fixed_seed(gname, algo):
+    g = GRAPHS[gname]
+    a = col.ALGORITHMS[algo](g, seed=3)
+    b = col.ALGORITHMS[algo](g, seed=3)
+    np.testing.assert_array_equal(a.colors, b.colors)
+    assert a.summary() == b.summary()
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("algo", ALGOS)
+def test_relabel_invariance(gname, algo):
+    g = GRAPHS[gname]
+    gs = shuffle_vertices(g, seed=11)
+    r0 = col.ALGORITHMS[algo](g, seed=5)
+    r1 = col.ALGORITHMS[algo](gs, seed=5)
+    assert col.is_proper(gs, r1.colors)
+    assert r1.n_colors <= g.max_degree + 1
+    assert abs(r1.n_colors - r0.n_colors) <= max(3, 0.5 * r0.n_colors)
+
+
+# --------------------------------------------------------------------------
+# native distance-2 vs the materialized power_graph oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_native_d2_proper_on_power_graph(gname):
+    g = GRAPHS[gname]
+    res = d2.color_distance2(g, seed=1)
+    assert d2.is_distance_d_proper(g, res.colors, 2)
+    assert res.distance == 2
+    gd = power_graph(g, 2)
+    serial = col.n_colors_used(col.greedy_sequential(gd))
+    assert res.n_colors <= gd.max_degree + 1
+    assert res.n_colors <= serial * 1.5 + 2
+
+
+def test_native_d2_matches_materialized_band():
+    """Native and materialized paths are the same algorithm on the same
+    conflict graph: identical seed must land in the same quality band."""
+    g = GRAPHS["mesh3d"]
+    nat = d2.color_distance2(g, seed=2)
+    mat, gd = d2.color_distance_d(g, d=2, algorithm="rsoc", seed=2)
+    assert nat.distance == 2 and mat.distance == 2
+    assert col.is_proper(gd, nat.colors) and col.is_proper(gd, mat.colors)
+    assert abs(nat.n_colors - mat.n_colors) <= max(3, 0.5 * mat.n_colors)
+
+
+def test_native_d2_determinism():
+    g = GRAPHS["mesh2d"]
+    a = d2.color_distance2(g, seed=4)
+    b = d2.color_distance2(g, seed=4)
+    np.testing.assert_array_equal(a.colors, b.colors)
+
+
+def test_native_d2_never_materializes(monkeypatch):
+    """The acceptance property: the native path must not construct G² —
+    any call into power_graph during coloring is a failure."""
+    g = gen.mesh2d(12, 12)
+
+    def boom(*a, **k):
+        raise AssertionError("native path materialized G^2")
+
+    monkeypatch.setattr(d2, "power_graph", boom)
+    res = d2.color_distance2(g, seed=0)
+    monkeypatch.undo()
+    assert d2.is_distance_d_proper(g, res.colors, 2)
+
+
+def test_native_d2_rejects_overflow_graphs():
+    """Hubs wider than ell_cap would silently lose two-hop constraints in
+    the COO side-channel — the native path must refuse, not miscolor."""
+    g = _star(40)
+    with pytest.raises(ValueError):
+        d2.color_distance2(g, ell_cap=8)
+    # the materialized oracle still handles it
+    res, gd = d2.color_distance_d(g, d=2, algorithm="rsoc", ell_cap=8)
+    assert col.is_proper(gd, res.colors)
+
+
+def test_star_graph_d2_needs_n_colors():
+    """Star S_n has diameter 2: every vertex is within two hops of every
+    other, so the distance-2 chromatic number is exactly n."""
+    g = _star(40)
+    res = d2.color_distance2(g, seed=1)
+    assert res.n_colors == 40
+    assert d2.is_distance_d_proper(g, res.colors, 2)
+
+
+# --------------------------------------------------------------------------
+# bipartite partial coloring (one-sided distance-2)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("maker,n_left", [
+    (lambda: gen.bipartite_random(300, 200, 4.0, seed=7), 300),
+    (lambda: gen.bipartite_banded(200, 100, band=2), 200),
+])
+def test_bipartite_partial_proper_and_bounded(maker, n_left):
+    g = maker()
+    res = d2.color_bipartite_partial(g, n_left, seed=1)
+    assert len(res.colors) == n_left
+    assert d2.is_bipartite_partial_proper(g, n_left, res.colors)
+    oracle = d2.bipartite_partial_oracle(g, n_left)
+    assert d2.is_bipartite_partial_proper(g, n_left, oracle)
+    assert res.n_colors <= col.n_colors_used(oracle) * 1.5 + 2
+
+
+def test_bipartite_partial_determinism():
+    g = GRAPHS["bipartite"]
+    a = d2.color_bipartite_partial(g, 300, seed=6)
+    b = d2.color_bipartite_partial(g, 300, seed=6)
+    np.testing.assert_array_equal(a.colors, b.colors)
+
+
+def test_complete_bipartite_left_needs_n_left_colors():
+    """K_{a,b}: every pair of left vertices shares every right neighbor, so
+    the one-sided distance-2 coloring needs exactly a colors."""
+    a_n, b_n = 20, 5
+    ii, jj = np.meshgrid(np.arange(a_n), np.arange(b_n), indexing="ij")
+    g = from_edges(a_n + b_n,
+                   np.stack([ii.ravel(), a_n + jj.ravel()], 1))
+    res = d2.color_bipartite_partial(g, a_n, seed=0)
+    assert res.n_colors == a_n
+    assert d2.is_bipartite_partial_proper(g, a_n, res.colors)
+
+
+# --------------------------------------------------------------------------
+# randomized property sweeps (hypothesis when available, numpy otherwise)
+# --------------------------------------------------------------------------
+
+def _np_random_graph(rng):
+    n = int(rng.integers(2, 100))
+    m = int(rng.integers(0, 4 * n))
+    edges = rng.integers(0, n, size=(m, 2))
+    return from_edges(n, edges.astype(np.int64))
+
+
+def _np_random_bipartite(rng):
+    nl = int(rng.integers(2, 60))
+    nr = int(rng.integers(1, 40))
+    m = int(rng.integers(0, 4 * nl))
+    src = rng.integers(0, nl, size=m)
+    dst = nl + rng.integers(0, nr, size=m)
+    return from_edges(nl + nr, np.stack([src, dst], 1).astype(np.int64)), nl
+
+
+def _check_native_d2(g, seed):
+    res = d2.color_distance2(g, seed=seed)
+    assert d2.is_distance_d_proper(g, res.colors, 2)
+    gd = power_graph(g, 2)
+    assert res.n_colors <= gd.max_degree + 1
+
+
+def _check_bipartite_partial(g, nl, seed):
+    res = d2.color_bipartite_partial(g, nl, seed=seed)
+    assert d2.is_bipartite_partial_proper(g, nl, res.colors)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def random_graph(draw):
+        n = draw(st.integers(2, 100))
+        m = draw(st.integers(0, 4 * n))
+        edges = draw(st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=m, max_size=m))
+        return from_edges(n, np.array(edges, dtype=np.int64).reshape(-1, 2))
+
+    @given(random_graph(), st.integers(0, 2))
+    @settings(max_examples=15, deadline=None)
+    def test_property_native_d2_proper(g, seed):
+        _check_native_d2(g, seed)
+
+    @given(st.integers(2, 60), st.integers(1, 40), st.integers(0, 2))
+    @settings(max_examples=15, deadline=None)
+    def test_property_bipartite_partial_proper(nl, nr, seed):
+        rng = np.random.default_rng(nl * 100 + nr)
+        m = int(rng.integers(0, 4 * nl))
+        src = rng.integers(0, nl, size=m)
+        dst = nl + rng.integers(0, nr, size=m)
+        g = from_edges(nl + nr, np.stack([src, dst], 1).astype(np.int64))
+        _check_bipartite_partial(g, nl, seed)
+else:
+    @pytest.mark.parametrize("case", range(6))
+    def test_property_native_d2_proper(case):
+        rng = np.random.default_rng(3000 + case)
+        _check_native_d2(_np_random_graph(rng), case)
+
+    @pytest.mark.parametrize("case", range(6))
+    def test_property_bipartite_partial_proper(case):
+        rng = np.random.default_rng(4000 + case)
+        g, nl = _np_random_bipartite(rng)
+        _check_bipartite_partial(g, nl, case)
