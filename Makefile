@@ -3,7 +3,8 @@
 #
 #   make test         tier-1 test suite (the gate every PR must keep green)
 #   make bench-smoke  tiny-graph run of every benchmark section — catches
-#                     import rot and shape bugs in minutes, not numbers
+#                     import rot and shape bugs in minutes, not numbers;
+#                     writes BENCH_<section>.json (uploaded as CI artifacts)
 #   make bench        paper-scale benchmark run (small suite)
 
 PYTHONPATH := src
@@ -15,7 +16,7 @@ test:
 	python -m pytest -x -q
 
 bench-smoke:
-	python -m benchmarks.run --scale=tiny
+	python -m benchmarks.run --scale=tiny --json
 
 bench:
 	python -m benchmarks.run --scale=small

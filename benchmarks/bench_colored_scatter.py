@@ -29,7 +29,7 @@ def main(scale: str = "small") -> None:
 
     ranks, n_colors = edge_color_by_dst(src, dst, n)
     csv = Csv(["variant", "ms", "n_colors", "deterministic_under_perm",
-               "max_abs_diff_vs_plain"])
+               "max_abs_diff_vs_plain", "ws_mb"])
 
     plain = jax.jit(lambda m, d: jax.ops.segment_sum(m, d, n))
     colored = jax.jit(lambda m, d, c: colored_segment_sum(m, d, n, c,
@@ -47,8 +47,10 @@ def main(scale: str = "small") -> None:
                         jnp.asarray(ranks[perm]))
     det = bool(np.array_equal(np.asarray(out_col), np.asarray(out_col_p)))
     diff = float(np.abs(np.asarray(out_col) - np.asarray(out_plain)).max())
-    csv.row("plain_segment_sum", t_plain * 1e3, 1, "n/a", 0.0)
-    csv.row("colored_schedule", t_col * 1e3, n_colors, str(det), diff)
+    ws = (msg.nbytes + np.asarray(out_plain).nbytes) / 2**20
+    csv.row("plain_segment_sum", t_plain * 1e3, 1, "n/a", 0.0, ws)
+    csv.row("colored_schedule", t_col * 1e3, n_colors, str(det), diff,
+            ws + ranks.nbytes / 2**20)
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 six paper graphs (the paper: parallel speed does not cost colors)."""
 from __future__ import annotations
 
-from benchmarks.common import Csv, suite
+from benchmarks.common import Csv, forb_ws_mb, suite
 from repro.core import coloring as col
 from repro.core.frontier import color_rsoc_compact
 
@@ -10,14 +10,19 @@ from repro.core.frontier import color_rsoc_compact
 def main(scale: str = "small") -> None:
     graphs = suite(scale)
     csv = Csv(["graph", "max_degree", "serial", "gm", "cat", "rsoc",
-               "rsoc_compact", "jp"])
+               "rsoc_compact", "jp", "ws_mb"])
     for gname, g in graphs.items():
         serial = col.n_colors_used(col.greedy_sequential(g))
         row = [gname, g.max_degree, serial]
+        rsoc_res = None
         for algo in ("gm", "cat", "rsoc"):
-            row.append(col.ALGORITHMS[algo](g, seed=1).n_colors)
+            res = col.ALGORITHMS[algo](g, seed=1)
+            if algo == "rsoc":
+                rsoc_res = res
+            row.append(res.n_colors)
         row.append(color_rsoc_compact(g, seed=1).n_colors)
         row.append(col.color_jp(g, seed=1).n_colors)
+        row.append(forb_ws_mb(g.n_vertices, 16, rsoc_res.final_C))
         csv.row(*row)
 
 

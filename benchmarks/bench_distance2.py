@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Csv, suite, time_fn
+from benchmarks.common import Csv, forb_ws_mb, suite, time_fn
 from repro.core import coloring as col
 from repro.core.distance2 import color_distance2
 from repro.graphs.csr import CSRGraph, power_graph
@@ -44,7 +44,8 @@ def main(scale: str = "small") -> None:
     graphs = {k: v for k, v in suite(scale).items()
               if k in ("mesh2d", "bmw3_2", "pwtk")}
     csv = Csv(["graph", "d", "path", "avg_degree_gd", "algo", "ms", "rounds",
-               "gather_passes", "conflicts", "colors", "ws_mb"])
+               "gather_passes", "conflicts", "colors", "ws_mb",
+               "forb_ws_mb"])
     for gname, g in graphs.items():
         for d in (1, 2):
             build_s, gd = time_fn(power_graph, g, d, repeats=1, warmup=0)
@@ -57,7 +58,8 @@ def main(scale: str = "small") -> None:
                 mat_ms[algo] = (build_s + sec) * 1e3
                 csv.row(gname, d, "materialized", avg_deg, algo,
                         mat_ms[algo], res.n_rounds, res.gather_passes,
-                        res.total_conflicts, res.n_colors, ws_mat)
+                        res.total_conflicts, res.n_colors, ws_mat,
+                        forb_ws_mb(gd.n_vertices, 16, res.final_C))
             if d != 2:
                 continue
             sec, res = time_fn(color_distance2, g, seed=1, repeats=2)
@@ -65,7 +67,8 @@ def main(scale: str = "small") -> None:
             ws_nat = ws_mb_native(g)
             csv.row(gname, d, "native", avg_deg, "rsoc", nat_ms,
                     res.n_rounds, res.gather_passes, res.total_conflicts,
-                    res.n_colors, ws_nat)
+                    res.n_colors, ws_nat,
+                    forb_ws_mb(g.n_vertices, 16, res.final_C))
             print(f"# native-vs-materialized {gname} d=2: "
                   f"native {nat_ms:.1f}ms / {ws_nat:.2f}MB ws  vs  "
                   f"materialized(rsoc) {mat_ms['rsoc']:.1f}ms / "

@@ -1,0 +1,86 @@
+"""Forbidden-table micro-benchmark: packed bitset vs dense (DESIGN.md §10).
+
+The inner structure every engine shares — gather panel -> forbidden set ->
+mex — isolated from graph effects: one (rows, W) neighbor-color panel,
+timed through both representations at several caps, reporting the
+working-set shrink (the acceptance bar: ≥ 4× at C=128; word-aligned caps
+give exactly 8×) and asserting the two mex outputs agree bit-for-bit on
+the spot (``mex_match``).  The ``overflow`` sweep saturates rows so the
+all-forbidden corner is timed and checked too.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_fn
+from repro.core import bitset
+from repro.core import coloring as col
+
+CAPS = (32, 64, 128, 256)
+ROWS = {"tiny": 1024, "small": 8192, "medium": 32768}
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _dense_pass(nbrc, C):
+    return col._mex(col._forbidden_from_nbrc(nbrc, C))
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _bitset_pass(nbrc, C):
+    return bitset.mex_words(bitset.pack_from_nbrc(nbrc, C), C)
+
+
+def main(scale: str = "small") -> None:
+    rows = ROWS.get(scale, 8192)
+    W = 32
+    rng = np.random.default_rng(0)
+    csv = Csv(["graph", "algo", "C", "rows", "W", "ms", "ws_mb",
+               "ws_reduction_x", "mex_match"])
+    for mode in ("random", "overflow"):
+        for C in CAPS:
+            if mode == "random":
+                Wm = W
+                panel = rng.integers(-1, 300, size=(rows, Wm)).astype(
+                    np.int32)
+            else:
+                # saturate: Wm >= C columns cycling 0..C-1, so every row
+                # holds every color < C — the all-forbidden corner must be
+                # timed and parity-checked at EVERY cap, not just C <= W
+                Wm = max(W, C)
+                panel = np.broadcast_to(
+                    np.arange(Wm, dtype=np.int32) % C, (rows, Wm)).copy()
+            nbrc = jnp.asarray(panel)
+            gname = f"panel_{mode}_{rows}x{Wm}"
+            ws = {impl: bitset.ws_mb(rows, C, impl)
+                  for impl in ("dense", "bitset")}
+            red = ws["dense"] / ws["bitset"]
+            d_ms, (d_mex, d_ovf) = time_fn(
+                lambda: jax.block_until_ready(_dense_pass(nbrc, C)),
+                repeats=5)
+            b_ms, (b_mex, b_ovf) = time_fn(
+                lambda: jax.block_until_ready(_bitset_pass(nbrc, C)),
+                repeats=5)
+            match = bool(np.array_equal(np.asarray(d_mex), np.asarray(b_mex))
+                         and np.array_equal(np.asarray(d_ovf),
+                                            np.asarray(b_ovf)))
+            if mode == "overflow":
+                assert bool(np.asarray(b_ovf).all()), \
+                    f"saturated panel must trip ovf on every row (C={C})"
+            csv.row(gname, "dense", C, rows, Wm, d_ms * 1e3, ws["dense"],
+                    1.0, match)
+            csv.row(gname, "bitset", C, rows, Wm, b_ms * 1e3, ws["bitset"],
+                    red, match)
+            if C == 128 and mode == "random":
+                print(f"# forbidden C=128: dense {ws['dense']:.3f}MB vs "
+                      f"bitset {ws['bitset']:.3f}MB ({red:.1f}x shrink), "
+                      f"time {d_ms * 1e3:.2f}ms -> {b_ms * 1e3:.2f}ms, "
+                      f"mex_match={match}", flush=True)
+            assert match, f"bitset/dense mex diverged at C={C} ({mode})"
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import Csv, time_fn
+from benchmarks.common import Csv, forb_ws_mb, time_fn
 from repro.core import coloring as col
 from repro.dynamic import dynamic_state, recolor_incremental, state_to_csr
 from repro.graphs import generators as gen
@@ -50,7 +50,7 @@ def main(scale: str = "small") -> None:
     graphs = {"rmat_g": gen.rmat_g(log2n), "rmat_b": gen.rmat_b(log2n)}
     csv = Csv(["graph", "n", "und_edges", "batch_frac", "batch_edges",
                "scratch_ms", "scratch_passes", "inc_ms", "inc_passes",
-               "time_speedup", "pass_speedup", "proper"])
+               "time_speedup", "pass_speedup", "proper", "ws_mb"])
     rng = np.random.default_rng(0)
     for gname, g in graphs.items():
         und = _undirected_edges(g)
@@ -80,7 +80,8 @@ def main(scale: str = "small") -> None:
                     inc_s * 1e3, inc_passes,
                     scratch_s / inc_s if inc_s else float("inf"),
                     scratch.gather_passes / max(inc_passes, 1),
-                    proper)
+                    proper,
+                    forb_ws_mb(st.frontier_cap, st.n_chunks, st.C))
             if abs(frac - 0.01) < 1e-12:
                 ok = proper and inc_passes < scratch.gather_passes
                 print(f"# acceptance[{gname}]: 1% batch proper={proper} "

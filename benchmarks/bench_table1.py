@@ -9,14 +9,14 @@ Timings are per algorithm end-to-end (jit-compiled, warmup excluded).
 """
 from __future__ import annotations
 
-from benchmarks.common import Csv, suite, time_fn
+from benchmarks.common import Csv, forb_ws_mb, suite, time_fn
 from repro.core import coloring as col
 
 
 def main(scale: str = "small") -> None:
     graphs = suite(scale)
     csv = Csv(["graph", "n_vertices", "algo", "ms", "speedup_vs_cat",
-               "rounds", "gather_passes", "conflicts", "colors"])
+               "rounds", "gather_passes", "conflicts", "colors", "ws_mb"])
     for gname, g in graphs.items():
         base_ms = None
         for algo in ("cat", "rsoc", "rsoc_compact"):
@@ -31,7 +31,8 @@ def main(scale: str = "small") -> None:
             csv.row(gname, g.n_vertices, algo, ms,
                     base_ms / ms if base_ms else 1.0,
                     res.n_rounds, res.gather_passes, res.total_conflicts,
-                    res.n_colors)
+                    res.n_colors,
+                    forb_ws_mb(g.n_vertices, 16, res.final_C))
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
-"""Shared benchmark utilities: timing, CSV emission, graph suite cache."""
+"""Shared benchmark utilities: timing, CSV emission (with an optional JSON
+sink for ``run.py --json``), graph suite cache, working-set accounting."""
 from __future__ import annotations
 
 import functools
@@ -6,7 +7,24 @@ import time
 
 import numpy as np
 
+from repro.core import bitset
 from repro.graphs import generators as gen
+
+# Active JSON row collector.  ``run.py --json`` installs a list here around
+# each section; every Csv.row() then also lands as a dict keyed by the CSV
+# header, and run.py writes the section's rows to BENCH_<section>.json.
+_json_rows = None
+
+
+def start_json_capture() -> None:
+    global _json_rows
+    _json_rows = []
+
+
+def end_json_capture() -> list:
+    global _json_rows
+    rows, _json_rows = _json_rows, None
+    return rows if rows is not None else []
 
 
 @functools.lru_cache(maxsize=None)
@@ -26,6 +44,25 @@ def time_fn(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
     return float(np.median(ts)), out
 
 
+def forb_ws_mb(n_rows: int, n_chunks: int, C: int,
+               impl: str = "bitset") -> float:
+    """Retained forbidden-table working set (MB) of one gather chunk:
+    ceil(n_rows / n_chunks) rows at cap C under ``impl`` — the per-pass
+    VMEM term the packed bitset shrinks 8× (DESIGN.md §10)."""
+    rows = -(-max(int(n_rows), 1) // max(int(n_chunks), 1))
+    return bitset.ws_mb(rows, C, impl)
+
+
+def _jsonable(v):
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, (np.bool_,)):
+        return bool(v)
+    return v
+
+
 class Csv:
     def __init__(self, header):
         self.header = list(header)
@@ -33,6 +70,9 @@ class Csv:
         print(",".join(self.header), flush=True)
 
     def row(self, *vals):
+        if _json_rows is not None:
+            _json_rows.append(
+                {h: _jsonable(v) for h, v in zip(self.header, vals)})
         vals = [f"{v:.6g}" if isinstance(v, float) else str(v) for v in vals]
         self.rows.append(vals)
         print(",".join(vals), flush=True)

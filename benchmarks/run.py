@@ -3,25 +3,38 @@
   table1           paper Table 1 + Figs 1-2 (time, speedup, passes)
   conflicts        paper Figs 3-4 + 5-6 (conflicts, rounds vs parallelism)
   colors           color-quality vs serial greedy
+  forbidden        forbidden-table micro: packed bitset vs dense (§10)
   distance2        paper §6 outlook (G^2 density; native vs materialized)
   colored_scatter  the technique applied to GNN aggregation
   incremental      dynamic-graph incremental recoloring vs from-scratch
   lm_step          measured smoke-scale LM train-step wall time
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--scale=NAME] [section ...]
+Usage: PYTHONPATH=src python -m benchmarks.run [--scale=NAME] [--json]
+                                               [section ...]
+
+``--json`` additionally writes BENCH_<section>.json per section (schema:
+{"section", "scale", "rows": [{... every CSV column, plus the normalized
+keys graph/algo/ms/ws_mb/colors/gather_passes when the section has them}]})
+so the perf trajectory is machine-trackable across PRs; CI uploads these as
+artifacts.
 
 Unknown section names abort *before* anything runs — a typo must not
 silently skip a benchmark after minutes of earlier sections.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 
-SECTIONS = ["table1", "conflicts", "colors", "distance2", "colored_scatter",
-            "incremental", "lm_step"]
+SECTIONS = ["table1", "conflicts", "colors", "forbidden", "distance2",
+            "colored_scatter", "incremental", "lm_step"]
 SCALES = ["tiny", "small", "medium"]
+
+# keys every BENCH_*.json row carries (None when the section lacks them)
+NORMALIZED_KEYS = ("graph", "algo", "ms", "ws_mb", "colors",
+                   "gather_passes")
 
 
 def lm_step(scale: str = "small") -> None:
@@ -41,10 +54,13 @@ def lm_step(scale: str = "small") -> None:
 
     archs = ("qwen3-1.7b",) if scale == "tiny" else \
         ("qwen3-1.7b", "phi3.5-moe-42b-a6.6b")
-    csv = Csv(["arch", "ms_per_step", "tokens_per_s", "loss0", "loss_end"])
+    csv = Csv(["arch", "ms_per_step", "tokens_per_s", "loss0", "loss_end",
+               "ws_mb"])
     for arch in archs:
         cfg = configs.get(arch).make_smoke()
         params = TF.init_params(jax.random.PRNGKey(0), cfg)
+        ws_mb = sum(x.size * x.dtype.itemsize
+                    for x in jax.tree.leaves(params)) / 2**20
         stream = TokenStream(batch=8, seq_len=64, vocab=cfg.vocab)
         step = make_train_step(lambda p, b: TF.train_step_loss(p, cfg, b),
                                OptimizerConfig(warmup_steps=2,
@@ -61,12 +77,14 @@ def lm_step(scale: str = "small") -> None:
         jax.block_until_ready(params)
         dt = (time.perf_counter() - t0) / n
         csv.row(arch, dt * 1e3, 8 * 64 / dt, float(m0["loss"]),
-                float(m["loss"]))
+                float(m["loss"]), ws_mb)
 
 
 def _section(name: str):
     if name == "table1":
         from benchmarks import bench_table1 as b
+    elif name == "forbidden":
+        from benchmarks import bench_forbidden as b
     elif name == "conflicts":
         from benchmarks import bench_conflicts as b
     elif name == "colors":
@@ -84,15 +102,28 @@ def _section(name: str):
     return b.main
 
 
+def _write_json(name: str, scale: str, rows: list, elapsed_s: float) -> str:
+    out = {"section": name, "scale": scale, "elapsed_s": elapsed_s,
+           "rows": [{**{k: r.get(k) for k in NORMALIZED_KEYS}, **r}
+                    for r in rows]}
+    path = f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    return path
+
+
 def main(argv=None) -> None:
     args = list(argv if argv is not None else sys.argv[1:])
     scale = "small"
+    emit_json = False
     names = []
     for a in args:
         if a.startswith("--scale="):
             scale = a.split("=", 1)[1]
         elif a == "--scale":
             raise SystemExit("use --scale=NAME")
+        elif a == "--json":
+            emit_json = True
         else:
             names.append(a)
     names = names or SECTIONS
@@ -105,9 +136,19 @@ def main(argv=None) -> None:
     for name in names:
         print(f"\n===== bench: {name} (scale={scale}) =====", flush=True)
         t0 = time.perf_counter()
-        _section(name)(scale=scale)
-        print(f"===== {name} done in {time.perf_counter() - t0:.1f}s =====",
-              flush=True)
+        if emit_json:
+            from benchmarks import common
+            common.start_json_capture()
+        try:
+            _section(name)(scale=scale)
+        finally:
+            elapsed = time.perf_counter() - t0
+            if emit_json:
+                from benchmarks import common
+                path = _write_json(name, scale, common.end_json_capture(),
+                                   elapsed)
+                print(f"# wrote {path}", flush=True)
+        print(f"===== {name} done in {elapsed:.1f}s =====", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,171 @@
+"""Packed-bitset forbidden sets + branch-free mex (DESIGN.md §10).
+
+Every coloring engine in this repo runs the same hot loop: gather neighbor
+colors -> forbidden set -> smallest free color (mex).  The dense
+representation materializes the forbidden set as a (rows, C) uint8/bool
+table and takes ``argmin`` over the color axis — C compare lanes and C bytes
+per row.  This module packs the same set into ``(rows, C//32)`` int32 words
+(bit b of word w == color 32*w + b forbidden): 32× fewer compare lanes in
+the pack, 8× less memory per retained row, and a branch-free mex built from
+two classic bit tricks:
+
+  * isolate the lowest ZERO bit of a word:  ``lz = ~w & (w + 1)``
+    (power of two when w has a zero, 0 when w is all-ones), and
+  * bit-index via the float-exponent trick: a power-of-two int32, routed
+    through uint32 -> float32 (exact for powers of two), carries its bit
+    index in the IEEE-754 exponent field: ``(bits >> 23) - 127``.
+
+The per-word candidate ``32*word + bit_index`` (full words get the sentinel
+C) is minimized across words — word k's candidates all precede word k+1's,
+so the min IS the first zero bit, i.e. exactly the dense ``argmin``.  On
+total overflow (every bit set) the dense ``argmin`` over an all-ones table
+returns 0; we mirror that so the two implementations are bit-identical even
+on rows the caller will retry at a doubled cap.
+
+Color caps that are not multiples of 32 are handled by pre-forbidding the
+tail bits (>= C) of the last word, so mex never returns an out-of-cap color
+and the overflow test is simply "every word is all-ones".
+
+All helpers are plain jnp on int32 lanes and trace equally inside Pallas
+kernel bodies (iotas are ``broadcasted_iota``; no 1-D iota, no gathers, no
+data-dependent branches), which is how the kernels in ``repro.kernels``
+share this exact code path with the jnp engines.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32  # bits per packed word
+
+# implementations understood by every engine's ``forbidden_impl`` switch:
+# "bitset" is the production path, "dense" the differential oracle.
+IMPLS = ("bitset", "dense")
+
+
+def n_words(C: int) -> int:
+    """Packed words per row for a cap of C colors (ceil division)."""
+    return -(-int(C) // WORD)
+
+
+def tail_mask(C: int) -> jnp.ndarray:
+    """(1, n_words) int32 with every bit for colors >= C set.
+
+    OR-ing this into a packed row pre-forbids the out-of-cap tail, making
+    mex/overflow exact for caps that are not multiples of 32.
+    """
+    nW = n_words(C)
+    base = jax.lax.broadcasted_iota(jnp.int32, (1, nW), 1) * WORD
+    live = jnp.clip(C - base, 0, WORD)            # valid bits per word
+    ones = jnp.where(live == WORD, jnp.int32(-1),
+                     (jnp.int32(1) << live) - 1)  # low `live` bits set
+    return ~ones
+
+
+def pack_from_nbrc(nbrc: jnp.ndarray, C: int) -> jnp.ndarray:
+    """Inline pack: (rows, W) neighbor colors -> (rows, n_words) bitset.
+
+    A color c lands as bit ``c & 31`` of word ``c >> 5``; slots outside
+    [0, C) (FILL = -1, overflowed colors) contribute nothing.  The compare
+    fabric is ``(nbrc >> 5) == word_iota`` — C/32 lanes per neighbor slot
+    instead of the dense path's C — and the OR-reduction over the neighbor
+    axis happens in registers, never materializing a (rows, W, C) one-hot.
+    Tail bits >= C come back pre-forbidden (see ``tail_mask``).
+    """
+    rows, W = nbrc.shape
+    nW = n_words(C)
+    ok = (nbrc >= 0) & (nbrc < C)
+    w_idx = jnp.where(ok, nbrc >> 5, -1)                      # (rows, W)
+    bit = jnp.where(ok, jnp.int32(1) << (nbrc & 31), 0)
+    word_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nW), 2)
+    hit = w_idx[:, :, None] == word_iota                      # (rows, W, nW)
+    contrib = jnp.where(hit, bit[:, :, None], 0)
+    words = jax.lax.reduce(contrib, np.int32(0), jax.lax.bitwise_or, (1,))
+    return words | tail_mask(C)
+
+
+def or_color(forb: jnp.ndarray, nc: jnp.ndarray, C: int) -> jnp.ndarray:
+    """OR one column of neighbor colors (rows,) into a packed (rows, nW)
+    table — the per-neighbor step of the inline pack, shaped for the Pallas
+    kernels' fori loops over the ELL width (one (rows, C//32) compare +
+    select per neighbor slot instead of the dense path's (rows, C))."""
+    nW = forb.shape[1]
+    ok = (nc >= 0) & (nc < C)
+    w_idx = jnp.where(ok, nc >> 5, -1)
+    bit = jnp.where(ok, jnp.int32(1) << (nc & 31), 0)
+    word_iota = jax.lax.broadcasted_iota(jnp.int32, (1, nW), 1)
+    return forb | jnp.where(w_idx[:, None] == word_iota, bit[:, None], 0)
+
+
+def init_words(rows: int, C: int) -> jnp.ndarray:
+    """All-free packed table with the out-of-cap tail pre-forbidden."""
+    return jnp.zeros((rows, n_words(C)), jnp.int32) | tail_mask(C)
+
+
+def pack_dense(forb_dense: jnp.ndarray, C: int) -> jnp.ndarray:
+    """Pack a dense (rows, C) 0/1 table into (rows, n_words) int32 words.
+
+    This is the scatter-then-pack route used for COO snapshot tables: COO
+    edges scatter into a transient dense table (jnp scatter has max but no
+    bitwise-or mode), which is packed once per pass — the *retained*
+    snapshot the chunk loop slices every round is the 8×-smaller packed
+    form.  The ELL gather path never needs the dense intermediate and packs
+    inline via ``pack_from_nbrc``.
+    """
+    rows = forb_dense.shape[0]
+    nW = n_words(C)
+    padded = jnp.zeros((rows, nW * WORD), forb_dense.dtype)
+    padded = jax.lax.dynamic_update_slice(padded, forb_dense, (0, 0))
+    lanes = padded.reshape(rows, nW, WORD).astype(jnp.int32)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, WORD), 2)
+    words = jax.lax.reduce(jnp.where(lanes > 0, jnp.int32(1) << shifts, 0),
+                           np.int32(0), jax.lax.bitwise_or, (2,))
+    return words | tail_mask(C)
+
+
+def mex_words(words: jnp.ndarray, C: int):
+    """Branch-free mex over packed rows.  Returns (mex (rows,), ovf (rows,)).
+
+    Per word: isolate the lowest zero bit (``~w & (w+1)``), recover its index
+    through the float-exponent trick, form the candidate ``32*word + index``
+    (sentinel C for all-ones words), and take the row minimum — bit-identical
+    to ``argmin`` over the dense table, including the overflow convention
+    (dense argmin over an all-ones row is 0).
+    """
+    rows, nW = words.shape
+    full = words == -1
+    lz = ~words & (words + 1)                     # lowest zero bit, isolated
+    f = lz.astype(jnp.uint32).astype(jnp.float32)  # exact: power of two
+    bidx = (jax.lax.bitcast_convert_type(f, jnp.int32) >> 23) - 127
+    base = jax.lax.broadcasted_iota(jnp.int32, (1, nW), 1) * WORD
+    cand = jnp.where(full, jnp.int32(C), base + bidx)
+    mex = jnp.min(cand, axis=-1).astype(jnp.int32)
+    ovf = mex >= C
+    return jnp.where(ovf, jnp.int32(0), mex), ovf
+
+
+def to_dense(words: jnp.ndarray, C: int) -> jnp.ndarray:
+    """Unpack (rows, n_words) -> (rows, C) uint8 (test/debug helper)."""
+    rows, nW = words.shape
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, WORD), 2)
+    bits = (words[:, :, None] >> shifts) & 1
+    return bits.reshape(rows, nW * WORD)[:, :C].astype(jnp.uint8)
+
+
+def ws_bytes(rows: int, C: int, impl: str = "bitset") -> int:
+    """Retained forbidden-table working set in bytes for ``rows`` rows.
+
+    dense: one uint8 lane per color; bitset: one int32 word per 32 colors.
+    The 8× ratio (at word-aligned C) is the per-tile VMEM shrink every
+    engine and kernel inherits (DESIGN.md §10).
+    """
+    if impl == "dense":
+        return rows * int(C)
+    if impl == "bitset":
+        return rows * n_words(C) * 4
+    raise ValueError(f"unknown forbidden impl {impl!r}; known: {IMPLS}")
+
+
+def ws_mb(rows: int, C: int, impl: str = "bitset") -> float:
+    return ws_bytes(rows, C, impl) / 2**20

@@ -44,9 +44,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitset
 from repro.graphs.csr import CSRGraph, FILL, from_edges, to_edge_list, to_ell
 
 MAX_ROUNDS_TRACE = 64  # fixed-size conflict trace (while_loop-friendly)
+
+# Forbidden-set representation used by every engine: "bitset" packs the
+# (rows, C) table into (rows, C//32) int32 words (core/bitset.py), "dense"
+# keeps the uint8 table and argmin mex — retained as the differential
+# oracle.  Engines take ``forbidden_impl=None`` => this default.
+DEFAULT_FORBIDDEN_IMPL = "bitset"
+
+
+def _resolve_impl(impl: Optional[str]) -> str:
+    impl = DEFAULT_FORBIDDEN_IMPL if impl is None else impl
+    if impl not in bitset.IMPLS:
+        raise ValueError(
+            f"unknown forbidden_impl {impl!r}; known: {bitset.IMPLS}")
+    return impl
 
 
 # --------------------------------------------------------------------------
@@ -128,7 +143,11 @@ class ColoringProblem:
 def _pick_C(g: CSRGraph, C: Optional[int]) -> int:
     if C is not None:
         return int(C)
-    c = min(g.max_degree + 2, 128)
+    # The packed-bitset forbidden set costs 4 bytes per 32 colors per row
+    # (vs 1 byte/color dense), so the default cap can afford to be generous:
+    # a larger cap means fewer cap-doubling retries on high-degree graphs
+    # (the paper's Figs. 3-6 regime) at 1/8th the old per-row cost.
+    c = min(g.max_degree + 2, 256)
     return int(max(32, -(-c // 32) * 32))
 
 
@@ -193,6 +212,45 @@ def _mex(forb):
     return mex, ovf
 
 
+# ---- forbidden-set representation dispatch (bitset | dense) --------------
+#
+# ``impl`` rides in p_static, so it is a jit-cache key like C and n_chunks;
+# the passes below only ever touch forbidden tables through these four
+# helpers, which keeps the two representations bit-identical by contract
+# (tests/test_bitset.py enforces it).
+
+def _forbidden(nbrc, C, impl):
+    """(rows, W) gathered neighbor colors -> forbidden table (inline pack)."""
+    if impl == "dense":
+        return _forbidden_from_nbrc(nbrc, C)
+    return bitset.pack_from_nbrc(nbrc, C)
+
+
+def _mex_of(forb, C, impl):
+    """Smallest free color + overflow flag per row of a forbidden table."""
+    if impl == "dense":
+        return _mex(forb)
+    return bitset.mex_words(forb, C)
+
+
+def _merge_forbidden(a, b, impl):
+    """Union of two forbidden tables (gathered row ∪ COO snapshot slice)."""
+    if impl == "dense":
+        return jnp.maximum(a, b)
+    return a | b
+
+
+def _snapshot_coo(src, dst, colors, n_rows, C, impl):
+    """Pass-start COO snapshot table: scatter dense, then (bitset) pack —
+    jnp scatters have no bitwise-or mode, so the packed path routes the
+    one-off scatter through a transient dense table and retains only the
+    packed words (see bitset.pack_dense)."""
+    dense = _forbidden_coo(src, dst, colors, n_rows, C)
+    if impl == "dense":
+        return dense
+    return bitset.pack_dense(dense, C)
+
+
 def _ovf_conflict(osrc, odst, colors, pri, n_rows):
     """Per-row defect flags from overflow edges (FILL slots are dead)."""
     live = (osrc >= 0) & (odst >= 0)
@@ -227,11 +285,11 @@ def _chunked_pass(p_static, ell, osrc, odst, pri, colors, U, force, *,
                                 defective right now (fresh check), or forced.
     Returns (colors, recolored_mask, n_defects, overflowed).
     """
-    n, n_pad, C, n_chunks = p_static
+    n, n_pad, C, n_chunks, impl = p_static
     cs = n_pad // n_chunks
     valid_row = jnp.arange(n_pad) < n
     has_ovf = osrc.shape[0] > 0
-    snap_forb = (_forbidden_coo(osrc, odst, colors, n_pad, C)
+    snap_forb = (_snapshot_coo(osrc, odst, colors, n_pad, C, impl)
                  if has_ovf else None)
     # overflow-edge conflicts, evaluated once on the pass-start snapshot.
     # (Conflicts only ever arise between two vertices recolored in the same
@@ -261,11 +319,11 @@ def _chunked_pass(p_static, ell, osrc, odst, pri, colors, U, force, *,
             n_def = n_def + (valid_k & U_k & defect).sum(dtype=jnp.int32)
         else:
             work = valid_k & (U_k | force_k)
-        forb = _forbidden_from_nbrc(nbrc, C)
+        forb = _forbidden(nbrc, C, impl)
         if has_ovf:
             sf_k = jax.lax.dynamic_slice_in_dim(snap_forb, lo, cs, 0)
-            forb = jnp.maximum(forb, sf_k)
-        mex, ovf_k = _mex(forb)
+            forb = _merge_forbidden(forb, sf_k, impl)
+        mex, ovf_k = _mex_of(forb, C, impl)
         newc = jnp.where(work, mex, c_k)
         colors = jax.lax.dynamic_update_slice_in_dim(colors, newc, lo, 0)
         recolored = jax.lax.dynamic_update_slice_in_dim(recolored, work, lo, 0)
@@ -277,7 +335,7 @@ def _chunked_pass(p_static, ell, osrc, odst, pri, colors, U, force, *,
 
 def _detect_pass(p_static, ell, osrc, odst, pri, colors, U):
     """CAT phase B: standalone defect detection over U (full gather pass)."""
-    n, n_pad, C, n_chunks = p_static
+    n, n_pad, C, n_chunks, impl = p_static
     valid_row = jnp.arange(n_pad) < n
     nbrc, nbrp = _gather_nbr(ell, colors, pri)
     defect = ((nbrc == colors[:, None]) & (colors[:, None] >= 0)
@@ -302,7 +360,7 @@ def _fused_repair(p_static, ell, osrc, odst, pri, colors, U, max_rounds,
     their first pass.  Returns (colors, n_rounds, trace, total_defects, ovf)
     — one neighbor-gather pass per round.
     """
-    n, n_pad, C, n_chunks = p_static
+    n, n_pad, C, n_chunks, impl = p_static
 
     def cond(s):
         # terminate when a full fused pass detected zero defects: colors were
@@ -333,7 +391,7 @@ def _fused_repair(p_static, ell, osrc, odst, pri, colors, U, max_rounds,
 
 @functools.partial(jax.jit, static_argnames=("p_static", "max_rounds"))
 def _rsoc_loop(ell, osrc, odst, pri, p_static, max_rounds):
-    n, n_pad, C, n_chunks = p_static
+    n, n_pad, C, n_chunks, impl = p_static
     colors0 = jnp.full((n_pad,), -1, jnp.int32)
     valid = jnp.arange(n_pad) < n
     zeros = jnp.zeros((n_pad,), bool)
@@ -349,7 +407,7 @@ def _rsoc_loop(ell, osrc, odst, pri, p_static, max_rounds):
 @functools.partial(jax.jit, static_argnames=("p_static", "max_rounds"))
 def _rsoc_repair_loop(ell, osrc, odst, pri, colors, U, p_static, max_rounds):
     """Externally-seeded fused repair (full-width passes; no round 0)."""
-    n, n_pad, C, n_chunks = p_static
+    n, n_pad, C, n_chunks, impl = p_static
     colors, r, trace, tot, ovf = _fused_repair(
         p_static, ell, osrc, odst, pri, colors, U, max_rounds)
     return colors, r, trace, tot, ovf
@@ -357,7 +415,7 @@ def _rsoc_repair_loop(ell, osrc, odst, pri, colors, U, p_static, max_rounds):
 
 @functools.partial(jax.jit, static_argnames=("p_static", "max_rounds"))
 def _cat_loop(ell, osrc, odst, pri, p_static, max_rounds):
-    n, n_pad, C, n_chunks = p_static
+    n, n_pad, C, n_chunks, impl = p_static
     colors0 = jnp.full((n_pad,), -1, jnp.int32)
     valid = jnp.arange(n_pad) < n
     zeros = jnp.zeros((n_pad,), bool)
@@ -390,7 +448,7 @@ def _cat_loop(ell, osrc, odst, pri, p_static, max_rounds):
 
 @functools.partial(jax.jit, static_argnames=("p_static",))
 def _gm_round0(ell, osrc, odst, pri, p_static):
-    n, n_pad, C, n_chunks = p_static
+    n, n_pad, C, n_chunks, impl = p_static
     colors0 = jnp.full((n_pad,), -1, jnp.int32)
     valid = jnp.arange(n_pad) < n
     zeros = jnp.zeros((n_pad,), bool)
@@ -400,8 +458,8 @@ def _gm_round0(ell, osrc, odst, pri, p_static):
     return colors1, defect, ovf
 
 
-@functools.partial(jax.jit, static_argnames=("n", "C", "max_rounds"))
-def _jp_loop(src, dst, pri, n, C, max_rounds):
+@functools.partial(jax.jit, static_argnames=("n", "C", "max_rounds", "impl"))
+def _jp_loop(src, dst, pri, n, C, max_rounds, impl=DEFAULT_FORBIDDEN_IMPL):
     colors0 = jnp.full((n,), -1, jnp.int32)
 
     def cond(s):
@@ -413,8 +471,8 @@ def _jp_loop(src, dst, pri, n, C, max_rounds):
         nbr_pri = jnp.where(uncolored[dst], pri[dst], -1)
         best = jnp.full((n,), -1, jnp.int32).at[src].max(nbr_pri)
         elig = uncolored & (pri > best)
-        forb = _forbidden_coo(src, dst, colors, n, C)
-        mex, o = _mex(forb)
+        forb = _snapshot_coo(src, dst, colors, n, C, impl)
+        mex, o = _mex_of(forb, C, impl)
         colors = jnp.where(elig, mex, colors)
         return colors, r + 1, ovf | (o & elig).any()
 
@@ -427,31 +485,43 @@ def _jp_loop(src, dst, pri, n, C, max_rounds):
 # public API
 # --------------------------------------------------------------------------
 
-def _run_with_retry(loop, prob: ColoringProblem, n_chunks: int,
-                    max_rounds: int):
-    """Run ``loop`` doubling the color cap until it fits.
+def _run_with_retry(run, C: int):
+    """Run ``run(C)``, doubling the color cap until it fits.
 
-    Returns (loop output, final C, number of cap-doubling retries).
+    ``run`` returns any tuple whose LAST element is the boolean overflow
+    flag.  This is the single cap-doubling loop shared by every engine
+    (from-scratch, frontier-compacted, JP, native distance-2, incremental)
+    — they differ only in the closure they pass.  Returns
+    (run output, final C, number of cap-doubling retries).
     """
-    C = prob.C
     retries = 0
     while True:
-        p_static = (prob.n, prob.n_pad, C, n_chunks)
-        out = loop(prob.ell, prob.ovf_src, prob.ovf_dst, prob.pri,
-                   p_static, max_rounds)
+        out = run(C)
         if not bool(out[-1]):
             return out, C, retries
         C *= 2  # rare: color cap exceeded -> retry with doubled cap
         retries += 1
 
 
+def _prob_runner(loop, prob: ColoringProblem, n_chunks: int, max_rounds: int,
+                 impl: str):
+    """Adapt the standard from-scratch loop signature to ``_run_with_retry``."""
+    def run(C):
+        p_static = (prob.n, prob.n_pad, C, n_chunks, impl)
+        return loop(prob.ell, prob.ovf_src, prob.ovf_dst, prob.pri,
+                    p_static, max_rounds)
+    return run
+
+
 def color_rsoc(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
                n_chunks: int = 16, max_rounds: int = 1000,
-               ell_cap: int = 512, relabel: bool = True) -> ColoringResult:
+               ell_cap: int = 512, relabel: bool = True,
+               forbidden_impl: Optional[str] = None) -> ColoringResult:
     """RSOC (paper Alg. 3): fused detect-and-recolor, one pass per round."""
+    impl = _resolve_impl(forbidden_impl)
     prob = prepare(g, seed, n_chunks, ell_cap, C, relabel)
     (colors, r, trace, tot, _), final_C, retries = _run_with_retry(
-        _rsoc_loop, prob, n_chunks, max_rounds)
+        _prob_runner(_rsoc_loop, prob, n_chunks, max_rounds, impl), prob.C)
     colors = _unpermute(colors, prob.perm, prob.n)
     return ColoringResult(colors=colors, n_rounds=int(r),
                           conflicts_per_round=np.asarray(trace),
@@ -464,11 +534,13 @@ def color_rsoc(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
 
 def color_cat(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
               n_chunks: int = 16, max_rounds: int = 1000,
-              ell_cap: int = 512, relabel: bool = True) -> ColoringResult:
+              ell_cap: int = 512, relabel: bool = True,
+              forbidden_impl: Optional[str] = None) -> ColoringResult:
     """Catalyurek et al. (paper Alg. 2): two-phase rounds."""
+    impl = _resolve_impl(forbidden_impl)
     prob = prepare(g, seed, n_chunks, ell_cap, C, relabel)
     (colors, r, trace, tot, _), final_C, retries = _run_with_retry(
-        _cat_loop, prob, n_chunks, max_rounds)
+        _prob_runner(_cat_loop, prob, n_chunks, max_rounds, impl), prob.C)
     colors = _unpermute(colors, prob.perm, prob.n)
     return ColoringResult(colors=colors, n_rounds=int(r),
                           conflicts_per_round=np.asarray(trace),
@@ -481,10 +553,12 @@ def color_cat(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
 
 def color_gm(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
              n_chunks: int = 16, ell_cap: int = 512,
-             relabel: bool = True) -> ColoringResult:
+             relabel: bool = True,
+             forbidden_impl: Optional[str] = None) -> ColoringResult:
     """Gebremedhin-Manne: speculate, detect, serial repair."""
+    impl = _resolve_impl(forbidden_impl)
     prob = prepare(g, seed, n_chunks, ell_cap, C, relabel)
-    p_static = (prob.n, prob.n_pad, prob.C, n_chunks)
+    p_static = (prob.n, prob.n_pad, prob.C, n_chunks, impl)
     colors, defect, ovf = _gm_round0(prob.ell, prob.ovf_src, prob.ovf_dst,
                                      prob.pri, p_static)
     colors_np = np.asarray(colors[:prob.n]).copy()
@@ -520,20 +594,17 @@ def color_gm(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
 
 
 def color_jp(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
-             max_rounds: int = 10000) -> ColoringResult:
+             max_rounds: int = 10000,
+             forbidden_impl: Optional[str] = None) -> ColoringResult:
     """Jones-Plassmann priority-MIS baseline (COO formulation)."""
+    impl = _resolve_impl(forbidden_impl)
     n = g.n_vertices
-    Cv = _pick_C(g, C)
     e = to_edge_list(g)
     src, dst = jnp.asarray(e[:, 0], jnp.int32), jnp.asarray(e[:, 1], jnp.int32)
     pri = jnp.asarray(np.random.default_rng(seed).permutation(n).astype(np.int32))
-    retries = 0
-    while True:
-        colors, r, ovf = _jp_loop(src, dst, pri, n, Cv, max_rounds)
-        if not bool(ovf):
-            break
-        Cv *= 2
-        retries += 1
+    (colors, r, _), Cv, retries = _run_with_retry(
+        lambda Cv: _jp_loop(src, dst, pri, n, Cv, max_rounds, impl),
+        _pick_C(g, C))
     colors = np.asarray(colors)
     return ColoringResult(colors=colors, n_rounds=int(r),
                           conflicts_per_round=np.zeros(1),

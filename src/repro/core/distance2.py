@@ -140,7 +140,7 @@ def _d2_chunked_pass(p_static, ell, pri, rows_mask, colors, U, force, *,
     distance-2, the left-side mask for bipartite partial coloring.
     Returns (colors, recolored_mask, n_defects, overflowed).
     """
-    n, n_pad, C, n_chunks = p_static
+    n, n_pad, C, n_chunks, impl = p_static
     cs = n_pad // n_chunks
 
     def chunk_body(k, carry):
@@ -160,8 +160,8 @@ def _d2_chunked_pass(p_static, ell, pri, rows_mask, colors, U, force, *,
             n_def = n_def + (valid_k & U_k & defect).sum(dtype=jnp.int32)
         else:
             work = valid_k & (U_k | force_k)
-        forb = col._forbidden_from_nbrc(allc, C)
-        mex, ovf_k = col._mex(forb)
+        forb = col._forbidden(allc, C, impl)
+        mex, ovf_k = col._mex_of(forb, C, impl)
         newc = jnp.where(work, mex, c_k)
         colors = jax.lax.dynamic_update_slice_in_dim(colors, newc, lo, 0)
         recolored = jax.lax.dynamic_update_slice_in_dim(recolored, work, lo, 0)
@@ -175,7 +175,7 @@ def _d2_compact_pass(p_static, ell, pri, colors, idx, idx_valid):
     """Two-hop fused pass over a compacted frontier-index buffer (the
     distance-2 mirror of ``frontier._compact_pass``): gathers only the
     ≤ cap frontier rows, so repair rounds pay cap·W² instead of n·W²."""
-    n, n_pad_s, C, n_chunks = p_static
+    n, n_pad_s, C, n_chunks, impl = p_static
     cap = idx.shape[0]
     cs = cap // n_chunks
     n_pad = colors.shape[0]
@@ -193,8 +193,8 @@ def _d2_compact_pass(p_static, ell, pri, colors, idx, idx_valid):
                   & (allp > pri_k[:, None])).any(axis=1) & live
         work = defect | (live & (c_k < 0))
         n_def = n_def + defect.sum(dtype=jnp.int32)
-        forb = col._forbidden_from_nbrc(allc, C)
-        mex, o = col._mex(forb)
+        forb = col._forbidden(allc, C, impl)
+        mex, o = col._mex_of(forb, C, impl)
         # dead slots carry idx == n_pad: out-of-bounds -> dropped
         colors = colors.at[ids].set(jnp.where(work, mex, c_k), mode="drop")
         recolored = recolored.at[ids].max(work, mode="drop")
@@ -209,7 +209,7 @@ def _d2_loop(ell, pri, rows_mask, p_static, cap, max_rounds):
     """Round 0 (tentative two-hop coloring of every masked row) followed by
     the frontier-compacted fused repair, with two-hop passes plugged into
     ``frontier._compact_repair``."""
-    n, n_pad, C, n_chunks = p_static
+    n, n_pad, C, n_chunks, impl = p_static
     colors0 = jnp.full((n_pad,), -1, jnp.int32)
     zeros = jnp.zeros((n_pad,), bool)
     colors1, U, _, ovf0 = _d2_chunked_pass(
@@ -236,8 +236,11 @@ def _pick_C_d2(g: CSRGraph, C: Optional[int]) -> int:
     if C is not None:
         return int(C)
     # distance-2 degree is bounded by deg² but typically far smaller
-    # (neighborhoods overlap); start modest, cap-doubling retries cover hubs.
-    c = min(g.max_degree * g.max_degree + 2, 256)
+    # (neighborhoods overlap); start moderately generous — the packed-bitset
+    # forbidden rows cost C/8 bytes, so doubling the old 256 default costs
+    # what 64 dense colors used to, and saves cap-doubling retries exactly
+    # where C is largest (this engine's tables dominate the working set).
+    c = min(g.max_degree * g.max_degree + 2, 512)
     return int(max(32, -(-c // 32) * 32))
 
 
@@ -255,17 +258,12 @@ def _prepare_native(g: CSRGraph, seed: int, n_chunks: int, C: Optional[int],
 
 
 def _run_d2_with_retry(prob: col.ColoringProblem, rows_mask, n_chunks: int,
-                       cap: int, max_rounds: int):
-    C = prob.C
-    retries = 0
-    while True:
-        p_static = (prob.n, prob.n_pad, C, n_chunks)
-        out = _d2_loop(prob.ell, prob.pri, rows_mask, p_static, cap,
-                       max_rounds)
-        if not bool(out[-1]):
-            return out, C, retries
-        C *= 2  # rare: color cap exceeded -> retry with doubled cap
-        retries += 1
+                       cap: int, max_rounds: int, impl: str):
+    def run(C):
+        p_static = (prob.n, prob.n_pad, C, n_chunks, impl)
+        return _d2_loop(prob.ell, prob.pri, rows_mask, p_static, cap,
+                        max_rounds)
+    return col._run_with_retry(run, prob.C)
 
 
 def _d2_result(colors, r, trace, tot, final_C, retries) -> col.ColoringResult:
@@ -280,13 +278,16 @@ def _d2_result(colors, r, trace, tot, final_C, retries) -> col.ColoringResult:
 def color_distance2(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
                     n_chunks: int = 16, max_rounds: int = 1000,
                     ell_cap: int = 512, relabel: bool = True,
-                    frontier_frac: float = 0.125) -> col.ColoringResult:
+                    frontier_frac: float = 0.125,
+                    forbidden_impl: Optional[str] = None
+                    ) -> col.ColoringResult:
     """Native distance-2 RSOC: fused two-hop gather, G² never materialized."""
+    impl = col._resolve_impl(forbidden_impl)
     prob = _prepare_native(g, seed, n_chunks, C, relabel, ell_cap)
     cap = fr.frontier_cap(prob.n_pad, n_chunks, frontier_frac)
     rows_mask = jnp.arange(prob.n_pad) < prob.n
     (colors, r, trace, tot, _), final_C, retries = _run_d2_with_retry(
-        prob, rows_mask, n_chunks, cap, max_rounds)
+        prob, rows_mask, n_chunks, cap, max_rounds, impl)
     colors = col._unpermute(colors, prob.perm, prob.n)
     return _d2_result(colors, r, trace, tot, final_C, retries)
 
@@ -295,7 +296,8 @@ def color_bipartite_partial(g: CSRGraph, n_left: int, seed: int = 0,
                             C: Optional[int] = None, n_chunks: int = 16,
                             max_rounds: int = 1000, ell_cap: int = 512,
                             relabel: bool = True,
-                            frontier_frac: float = 0.125
+                            frontier_frac: float = 0.125,
+                            forbidden_impl: Optional[str] = None
                             ) -> col.ColoringResult:
     """One-sided distance-2 coloring of a bipartite graph (Jacobian
     compression): color only the left side [0, n_left) so that any two left
@@ -308,11 +310,12 @@ def color_bipartite_partial(g: CSRGraph, n_left: int, seed: int = 0,
     """
     if not 0 < n_left <= g.n_vertices:
         raise ValueError(f"n_left {n_left} out of range for n={g.n_vertices}")
+    impl = col._resolve_impl(forbidden_impl)
     prob = _prepare_native(g, seed, n_chunks, C, relabel, ell_cap)
     cap = fr.frontier_cap(prob.n_pad, n_chunks, frontier_frac)
     mask_np = np.zeros(prob.n_pad, dtype=bool)
     mask_np[prob.perm[:n_left]] = True        # left side, relabeled space
     (colors, r, trace, tot, _), final_C, retries = _run_d2_with_retry(
-        prob, jnp.asarray(mask_np), n_chunks, cap, max_rounds)
+        prob, jnp.asarray(mask_np), n_chunks, cap, max_rounds, impl)
     colors = col._unpermute(colors, prob.perm, prob.n)[:n_left]
     return _d2_result(colors, r, trace, tot, final_C, retries)

@@ -46,7 +46,8 @@ MAX_ROUNDS_TRACE = col.MAX_ROUNDS_TRACE
 # --------------------------------------------------------------------------
 
 def _local_fused_pass(ell_loc, colors_glb, pri_glb, U_loc, force_loc,
-                      row_base, n, C, n_chunks, *, detect: bool):
+                      row_base, n, C, n_chunks, *, detect: bool,
+                      impl: str = col.DEFAULT_FORBIDDEN_IMPL):
     """Chunked detect-and-recolor of this shard's rows against global colors.
 
     ell_loc:   (n_loc, W) global neighbor ids
@@ -77,8 +78,8 @@ def _local_fused_pass(ell_loc, colors_glb, pri_glb, U_loc, force_loc,
             n_def = n_def + (valid_k & U_k & defect).sum(dtype=jnp.int32)
         else:
             work = valid_k & (U_k | force_k)
-        forb = col._forbidden_from_nbrc(nbrc, C)
-        mex, _ = col._mex(forb)
+        forb = col._forbidden(nbrc, C, impl)
+        mex, _ = col._mex_of(forb, C, impl)
         newc = jnp.where(work, mex, c_k)
         colors_l = jax.lax.dynamic_update_slice_in_dim(colors_l, newc, lo, 0)
         # keep the *global* view fresh for later chunks of this shard
@@ -97,9 +98,11 @@ def _local_fused_pass(ell_loc, colors_glb, pri_glb, U_loc, force_loc,
 # --------------------------------------------------------------------------
 
 def build_rsoc_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
-                           C: int, n_chunks: int, max_rounds: int = 64):
+                           C: int, n_chunks: int, max_rounds: int = 64,
+                           forbidden_impl: Optional[str] = None):
     """Returns a jittable fn(ell (n_pad, W), pri (n_pad,)) -> (colors, rounds,
     conflicts). ONE fused collective per round (colors slice + defect count)."""
+    impl = col._resolve_impl(forbidden_impl)
     D = int(np.prod([mesh.shape[a] for a in axis.split(",")]))
     axes = tuple(axis.split(","))
     n_loc = n_pad // D
@@ -123,7 +126,7 @@ def build_rsoc_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
 
         # round 0: color everything; 1 collective
         c_l, _, _ = _local_fused_pass(ell_loc, colors0, pri, zeros, ones,
-                                      row_base, n, C, n_chunks, detect=False)
+                                      row_base, n, C, n_chunks, detect=False, impl=impl)
         colors, _ = exchange(c_l, jnp.int32(0))
         U0 = ones
 
@@ -135,7 +138,7 @@ def build_rsoc_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
             colors, U, trace, r, tot, _ = s
             c_l, recolored, n_def_l = _local_fused_pass(
                 ell_loc, colors, pri, U, jnp.zeros((n_loc,), bool),
-                row_base, n, C, n_chunks, detect=True)
+                row_base, n, C, n_chunks, detect=True, impl=impl)
             colors2, n_def = exchange(c_l, n_def_l)      # ONE collective
             trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(
                 n_def.astype(jnp.int32))
@@ -154,8 +157,10 @@ def build_rsoc_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
 
 
 def build_cat_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
-                          C: int, n_chunks: int, max_rounds: int = 64):
+                          C: int, n_chunks: int, max_rounds: int = 64,
+                          forbidden_impl: Optional[str] = None):
     """CAT with the structural 2-collectives-per-round schedule."""
+    impl = col._resolve_impl(forbidden_impl)
     axes = tuple(axis.split(","))
     D = int(np.prod([mesh.shape[a] for a in axes]))
     n_loc = n_pad // D
@@ -181,7 +186,7 @@ def build_cat_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
 
         # round 0
         c_l, _, _ = _local_fused_pass(ell_loc, colors0, pri, zeros, ones,
-                                      row_base, n, C, n_chunks, detect=False)
+                                      row_base, n, C, n_chunks, detect=False, impl=impl)
         colors = gather_colors(c_l)                       # collective 1
         U = detect_local(colors)
         n_def = jax.lax.psum(U.sum(dtype=jnp.int32), axname)  # collective 2
@@ -195,7 +200,7 @@ def build_cat_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
             # phase A: recolor defect set
             c_l, _, _ = _local_fused_pass(ell_loc, colors, pri, U, zeros,
                                           row_base, n, C, n_chunks,
-                                          detect=False)
+                                          detect=False, impl=impl)
             colors2 = gather_colors(c_l)                  # collective 1
             # phase B: detect + global consensus
             U2 = detect_local(colors2) & U
@@ -218,7 +223,8 @@ def build_cat_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
 # --------------------------------------------------------------------------
 
 def build_rsoc_halo(mesh: Mesh, axis: str, plan_shapes: dict, n: int, C: int,
-                    n_chunks: int, max_rounds: int = 64):
+                    n_chunks: int, max_rounds: int = 64,
+                    forbidden_impl: Optional[str] = None):
     """RSOC exchanging only boundary colors.
 
     Inputs per shard (leading dim D, sharded): ell_local (n_loc, W) with
@@ -226,6 +232,7 @@ def build_rsoc_halo(mesh: Mesh, axis: str, plan_shapes: dict, n: int, C: int,
     gathered (D*max_b,) boundary payload.  Color table per shard has
     n_loc + max_g slots (ghosts at the tail).
     """
+    impl = col._resolve_impl(forbidden_impl)
     axes = tuple(axis.split(","))
     D, n_loc = plan_shapes["D"], plan_shapes["n_loc"]
     max_b, max_g = plan_shapes["max_b"], plan_shapes["max_g"]
@@ -252,7 +259,8 @@ def build_rsoc_halo(mesh: Mesh, axis: str, plan_shapes: dict, n: int, C: int,
 
         def fused(colors_tab, U, force, detect):
             return _local_fused_pass(ell_loc, colors_tab, pri_tab, U, force,
-                                     0, n_loc, C, n_chunks, detect=detect)
+                                     0, n_loc, C, n_chunks, detect=detect,
+                                     impl=impl)
 
         # round 0
         c_l, _, _ = fused(colors_tab0, zeros, valid_loc, False)

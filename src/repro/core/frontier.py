@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.csr import CSRGraph
+from repro.core import bitset
 from repro.core import coloring as col
 
 MAX_ROUNDS_TRACE = col.MAX_ROUNDS_TRACE
@@ -46,7 +47,7 @@ def _compact_pass(p_static, ell, osrc, odst, pri, colors, idx, idx_valid):
     it is defective *right now* — or still uncolored (incremental seeds).
     Returns (colors, recolored_mask, n_defects, cap_overflowed).
     """
-    n, n_pad_s, C, n_chunks = p_static
+    n, n_pad_s, C, n_chunks, impl = p_static
     cap = idx.shape[0]
     cs = cap // n_chunks
     n_pad = colors.shape[0]
@@ -56,7 +57,10 @@ def _compact_pass(p_static, ell, osrc, odst, pri, colors, idx, idx_valid):
         # argument), built *frontier-local*: an inverse index maps each
         # overflow edge to its compacted slot (or nowhere), so the tables
         # are (cap, C)/(cap,), not (n_pad, C) — the compaction win must
-        # survive the spill regime the dynamic workloads live in.
+        # survive the spill regime the dynamic workloads live in.  The
+        # scatter lands in a transient dense table; only the packed words
+        # are retained across the chunk loop (scatter-then-pack,
+        # DESIGN.md §10).
         inv = jnp.full((n_pad + 1,), -1, jnp.int32).at[idx].set(
             jnp.arange(cap, dtype=jnp.int32))
         olive = (osrc >= 0) & (odst >= 0)
@@ -66,6 +70,8 @@ def _compact_pass(p_static, ell, osrc, odst, pri, colors, idx, idx_valid):
         snap_forb = jnp.zeros((cap, C), jnp.uint8).at[
             jnp.clip(pos, 0, cap - 1),
             jnp.clip(nbr_c, 0, C - 1)].max(ok.astype(jnp.uint8))
+        if impl == "bitset":
+            snap_forb = bitset.pack_dense(snap_forb, C)
         conf = ((pos >= 0) & (colors[jnp.clip(osrc, 0, n_pad - 1)] == nbr_c)
                 & (nbr_c >= 0)
                 & (pri[jnp.clip(odst, 0, n_pad - 1)]
@@ -91,11 +97,11 @@ def _compact_pass(p_static, ell, osrc, odst, pri, colors, idx, idx_valid):
         defect = defect & live
         work = defect | (live & (c_k < 0))
         n_def = n_def + defect.sum(dtype=jnp.int32)
-        forb = col._forbidden_from_nbrc(nbrc, C)
+        forb = col._forbidden(nbrc, C, impl)
         if has_ovf:
-            forb = jnp.maximum(forb, jax.lax.dynamic_slice_in_dim(
-                snap_forb, lo, cs, 0))
-        mex, o = col._mex(forb)
+            forb = col._merge_forbidden(forb, jax.lax.dynamic_slice_in_dim(
+                snap_forb, lo, cs, 0), impl)
+        mex, o = col._mex_of(forb, C, impl)
         # dead slots carry idx == n_pad: out-of-bounds -> dropped
         colors = colors.at[ids].set(jnp.where(work, mex, c_k), mode="drop")
         recolored = recolored.at[ids].max(work, mode="drop")
@@ -133,7 +139,7 @@ def _compact_repair(p_static, cap, pass_small, pass_big, colors, U,
     ``pass_big(colors, U, force)`` is the full-width fallback; both return
     (colors, recolored_mask, n_defects, cap_overflowed).
     """
-    n, n_pad, C, n_chunks = p_static
+    n, n_pad, C, n_chunks, impl = p_static
 
     def compact(U):
         idx = jnp.nonzero(U, size=cap, fill_value=n_pad)[0].astype(jnp.int32)
@@ -172,7 +178,7 @@ def _compact_repair(p_static, cap, pass_small, pass_big, colors, U,
 
 @functools.partial(jax.jit, static_argnames=("p_static", "cap", "max_rounds"))
 def _rsoc_compact_loop(ell, osrc, odst, pri, p_static, cap, max_rounds):
-    n, n_pad, C, n_chunks = p_static
+    n, n_pad, C, n_chunks, impl = p_static
     colors0 = jnp.full((n_pad,), -1, jnp.int32)
     valid = jnp.arange(n_pad) < n
     zeros = jnp.zeros((n_pad,), bool)
@@ -199,21 +205,20 @@ def _repair_compact_loop(ell, osrc, odst, pri, colors, U, p_static, cap,
 def color_rsoc_compact(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
                        n_chunks: int = 16, max_rounds: int = 1000,
                        ell_cap: int = 512, relabel: bool = True,
-                       frontier_frac: float = 0.125) -> col.ColoringResult:
+                       frontier_frac: float = 0.125,
+                       forbidden_impl: Optional[str] = None
+                       ) -> col.ColoringResult:
     """RSOC with frontier compaction after round 0."""
+    impl = col._resolve_impl(forbidden_impl)
     prob = col.prepare(g, seed, n_chunks, ell_cap, C, relabel)
     cap = frontier_cap(prob.n_pad, n_chunks, frontier_frac)
-    C_ = prob.C
-    retries = 0
-    while True:
-        p_static = (prob.n, prob.n_pad, C_, n_chunks)
-        colors, r, trace, tot, ovf = _rsoc_compact_loop(
-            prob.ell, prob.ovf_src, prob.ovf_dst, prob.pri, p_static, cap,
-            max_rounds)
-        if not bool(ovf):
-            break
-        C_ *= 2
-        retries += 1
+
+    def run(C_):
+        p_static = (prob.n, prob.n_pad, C_, n_chunks, impl)
+        return _rsoc_compact_loop(prob.ell, prob.ovf_src, prob.ovf_dst,
+                                  prob.pri, p_static, cap, max_rounds)
+
+    (colors, r, trace, tot, _), C_, retries = col._run_with_retry(run, prob.C)
     colors = col._unpermute(colors, prob.perm, prob.n)
     return col.ColoringResult(
         colors=colors, n_rounds=int(r), conflicts_per_round=np.asarray(trace),

@@ -47,6 +47,7 @@ class DynamicColoringState:
     delta_cap: int           # update-slice width (fixed shape per slice)
     perm: np.ndarray         # old id -> new id
     inv_perm: np.ndarray     # new id -> old id
+    forbidden_impl: str = "bitset"  # forbidden-set representation (§10)
     version: int = 0
     last_rounds: int = 0
     last_conflicts: int = 0
@@ -79,15 +80,19 @@ def dynamic_state(g: CSRGraph, seed: int = 0, n_chunks: int = 16,
                   ell_cap: int = 512, C: Optional[int] = None,
                   ell_slack: int = 4, ovf_cap: Optional[int] = None,
                   delta_cap: int = 2048, frontier_frac: float = 0.125,
-                  max_rounds: int = 1000) -> DynamicColoringState:
+                  max_rounds: int = 1000,
+                  forbidden_impl: Optional[str] = None
+                  ) -> DynamicColoringState:
     """Encode ``g`` for mutation and color it from scratch once.
 
     ``ell_slack`` free slots are appended to every row so typical inserts
     land in ELL; ``ovf_cap`` sizes the spill buffer (grows on demand).
     """
+    impl = col._resolve_impl(forbidden_impl)
     prob = col.prepare(g, seed, n_chunks, ell_cap, C)
     (colors_n, r, trace, tot, _), final_C, retries = col._run_with_retry(
-        col._rsoc_loop, prob, n_chunks, max_rounds)
+        col._prob_runner(col._rsoc_loop, prob, n_chunks, max_rounds, impl),
+        prob.C)
 
     ell_np = np.asarray(prob.ell)
     if ell_slack > 0:
@@ -113,6 +118,7 @@ def dynamic_state(g: CSRGraph, seed: int = 0, n_chunks: int = 16,
         frontier_cap=frontier.frontier_cap(prob.n_pad, n_chunks,
                                            frontier_frac),
         delta_cap=int(delta_cap), perm=prob.perm, inv_perm=inv_perm,
+        forbidden_impl=impl,
         version=0, last_rounds=int(r), last_conflicts=int(tot),
         last_gather_passes=1 + int(r), total_gather_passes=1 + int(r),
         retries=retries, ovf_grows=0)
@@ -152,18 +158,15 @@ def recolor_incremental(state: DynamicColoringState,
         state.delta_cap)
 
     # repair: frontier-compacted fused RSOC seeded from touched endpoints
-    C = state.C
-    retries = 0
-    while True:
-        p_static = (state.n, state.n_pad, C, state.n_chunks)
-        colors2, r, trace, tot, ovf = frontier._repair_compact_loop(
+    def run(C):
+        p_static = (state.n, state.n_pad, C, state.n_chunks,
+                    state.forbidden_impl)
+        return frontier._repair_compact_loop(
             ell, osrc, odst, state.pri, state.colors_dev, U, p_static,
             state.frontier_cap, max_rounds)
-        if not bool(ovf):
-            break
-        C *= 2  # rare: color cap exceeded -> re-repair with doubled cap
-        retries += 1
 
+    (colors2, r, trace, tot, _), C, retries = col._run_with_retry(
+        run, state.C)
     passes = int(r)
     return dataclasses.replace(
         state, ell=ell, ovf_src=osrc, ovf_dst=odst, colors_dev=colors2,

@@ -4,7 +4,8 @@ One VMEM round-trip does both the paper's conflict detection and the
 immediate repair — the kernel-level expression of merging Alg. 2's two phases
 into Alg. 3's single phase: neighbor colors are gathered ONCE and feed both
 the defect test (same color as a higher-priority neighbor) and the first-fit
-re-color.
+re-color.  The forbidden accumulator is the packed (BV, C//32) bitset of
+DESIGN.md §10 (inline pack + branch-free mex via ``core/bitset.py``).
 """
 from __future__ import annotations
 
@@ -13,6 +14,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core import bitset
 
 
 def _detect_recolor_kernel(ell_ref, colors_ref, pri_ref, U_ref, rowc_ref,
@@ -33,17 +36,16 @@ def _detect_recolor_kernel(ell_ref, colors_ref, pri_ref, U_ref, rowc_ref,
         nc = jnp.where(idx >= 0, colors[safe], -1)
         np_ = jnp.where(idx >= 0, pri[safe], -1)
         defect = defect | ((nc == c_r) & (c_r >= 0) & (np_ > p_r))
-        forb = forb | (nc[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1))
-        return forb, defect
+        return bitset.or_color(forb, nc, C), defect
 
     forb, defect = jax.lax.fori_loop(
         0, W, body,
-        (jnp.zeros((BV, C), jnp.bool_), jnp.zeros((BV,), jnp.bool_)))
+        (bitset.init_words(BV, C), jnp.zeros((BV,), jnp.bool_)))
     work = U & defect
-    mex = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
+    mex, ovf = bitset.mex_words(forb, C)
     newc_ref[...] = jnp.where(work, mex, c_r)
     rec_ref[...] = work
-    ovf_ref[...] = forb.all(axis=1) & work
+    ovf_ref[...] = ovf & work
 
 
 @functools.partial(jax.jit,

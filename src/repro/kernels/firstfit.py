@@ -1,11 +1,16 @@
 """Pallas TPU kernel: first-fit tentative coloring over an ELL vertex tile.
 
 The paper's hot loop (gather neighbor colors -> forbidden set -> smallest free
-color).  TPU adaptation (DESIGN.md §2): rectangular (BV, W) ELL tiles in VMEM,
-forbidden sets as a (BV, C) one-hot table built by W vectorized compares on
-the VPU, first-fit = argmin over the color axis (priority encode).  The color
-vector is VMEM-resident per invocation (graphs to ~4M vertices; beyond that
-the ops.py wrapper falls back to the jnp path / page-indirected design notes).
+color).  TPU adaptation (DESIGN.md §2, §10): rectangular (BV, W) ELL tiles in
+VMEM; the forbidden set is a packed (BV, C//32) int32 bitset built by W
+vectorized compare+OR steps on the VPU — 32× fewer compare lanes and 8× less
+VMEM than the old (BV, C) one-hot bool table, which is what lets the tile
+take bigger BV/C without spilling.  First-fit = branch-free mex over the
+packed words (isolate-lowest-zero-bit + float-exponent bit index,
+``core/bitset.py`` — the identical code path the jnp engines trace).  The
+color vector is VMEM-resident per invocation (graphs to ~4M vertices; beyond
+that the ops.py wrapper falls back to the jnp path / page-indirected design
+notes).
 
 Grid: one program per BV-row block of the chunk being colored.
 """
@@ -17,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import bitset
+
 
 def _firstfit_kernel(ell_ref, colors_ref, out_ref, ovf_ref, *, C: int, n: int):
     ell = ell_ref[...]                       # (BV, W) int32
@@ -27,11 +34,12 @@ def _firstfit_kernel(ell_ref, colors_ref, out_ref, ovf_ref, *, C: int, n: int):
         idx = ell[:, j]
         nc = colors[jnp.clip(idx, 0, n - 1)]
         nc = jnp.where(idx >= 0, nc, -1)
-        return forb | (nc[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1))
+        return bitset.or_color(forb, nc, C)
 
-    forb = jax.lax.fori_loop(0, W, body, jnp.zeros((BV, C), jnp.bool_))
-    out_ref[...] = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
-    ovf_ref[...] = forb.all(axis=1)
+    forb = jax.lax.fori_loop(0, W, body, bitset.init_words(BV, C))
+    mex, ovf = bitset.mex_words(forb, C)
+    out_ref[...] = mex
+    ovf_ref[...] = ovf
 
 
 @functools.partial(jax.jit, static_argnames=("C", "block_rows", "interpret"))

@@ -5,6 +5,11 @@ CPU (this container) — the dry-run therefore lowers the pure-jnp
 memory-efficient paths, while kernels are validated in interpret mode by the
 test suite.  ``backend='pallas_interpret'`` forces the kernel body through the
 Pallas interpreter (CPU-executable, bit-faithful to kernel semantics).
+
+The coloring dispatchers take ``impl`` ("bitset" | "dense"), forwarded to
+the jnp refs; the Pallas kernels are the packed-bitset expression by
+construction (DESIGN.md §10) and ignore it — every (backend, impl) corner
+must agree bit-for-bit (tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -29,27 +34,29 @@ def _resolve(backend: str) -> str:
     return default_backend() if backend == "auto" else backend
 
 
-def firstfit(ell, colors, C: int = 64, backend: str = "auto", **kw):
+def firstfit(ell, colors, C: int = 64, backend: str = "auto",
+             impl: str = "bitset", **kw):
     b = _resolve(backend)
     if b == "jnp":
-        return ref.firstfit_ref(ell, colors, C)
+        return ref.firstfit_ref(ell, colors, C, impl=impl)
     interp = b == "pallas_interpret"
     mex, ovf = _firstfit_pallas(ell, colors, C=C, interpret=interp, **kw)
     return mex, ovf
 
 
 def detect_recolor(ell, colors, pri, U_rows, row_start: int, C: int = 64,
-                   backend: str = "auto", **kw):
+                   backend: str = "auto", impl: str = "bitset", **kw):
     b = _resolve(backend)
     if b == "jnp":
-        return ref.detect_recolor_ref(ell, colors, pri, row_start, U_rows, C)
+        return ref.detect_recolor_ref(ell, colors, pri, row_start, U_rows, C,
+                                      impl=impl)
     interp = b == "pallas_interpret"
     return _dr_pallas(ell, colors, pri, U_rows, row_start=row_start, C=C,
                       interpret=interp, **kw)
 
 
 def twohop(ell_rows, ell_all, colors, pri, U_rows, row_start: int,
-           C: int = 64, backend: str = "auto", **kw):
+           C: int = 64, backend: str = "auto", impl: str = "bitset", **kw):
     """Fused two-hop (distance-2) detect-and-recolor for rows
     [row_start, row_start + R).  Falls back to jnp when the full ELL table
     would not fit VMEM (n_all * W * 4 > ~8MB)."""
@@ -58,7 +65,7 @@ def twohop(ell_rows, ell_all, colors, pri, U_rows, row_start: int,
         b = "jnp"
     if b == "jnp":
         return ref.twohop_ref(ell_rows, ell_all, colors, pri, row_start,
-                              U_rows, C)
+                              U_rows, C, impl=impl)
     interp = b == "pallas_interpret"
     return _twohop_pallas(ell_rows, ell_all, colors, pri, U_rows,
                           row_start=row_start, C=C, interpret=interp, **kw)

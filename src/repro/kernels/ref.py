@@ -2,18 +2,36 @@
 
 Each ``<name>_ref`` mirrors the corresponding kernel's contract exactly; the
 kernel tests sweep shapes/dtypes and assert parity in interpret mode.
+
+The coloring refs take ``impl``: "bitset" (default) traces the same packed
+forbidden-set + branch-free mex the kernels use (core/bitset.py), "dense"
+keeps the original (R, W, C) one-hot + argmin formulation as the
+independent oracle — the parity tests cross-check all three corners
+(kernel, bitset ref, dense ref) bit-for-bit.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import bitset
+
+
+def _forbidden_mex(nbrc, C: int, impl: str):
+    """(R, W) gathered colors -> (mex (R,), all-forbidden (R,) bool)."""
+    if impl == "dense":
+        forb = (nbrc[:, :, None] == jnp.arange(C)[None, None, :]).any(axis=1)
+        mex = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
+        return mex, forb.all(axis=1)
+    words = bitset.pack_from_nbrc(nbrc, C)
+    return bitset.mex_words(words, C)
+
 
 # --------------------------------------------------------------------------
 # first-fit tentative coloring (paper Alg. 1 inner loop, one chunk)
 # --------------------------------------------------------------------------
 
-def firstfit_ref(ell, colors, C: int):
+def firstfit_ref(ell, colors, C: int, impl: str = "bitset"):
     """Smallest color not used by any neighbor, per ELL row.
 
     ell:    (R, W) int32 neighbor ids, FILL(-1) padded
@@ -22,16 +40,15 @@ def firstfit_ref(ell, colors, C: int):
     """
     n = colors.shape[0]
     nbrc = jnp.where(ell >= 0, colors[jnp.clip(ell, 0, n - 1)], -1)
-    forb = (nbrc[:, :, None] == jnp.arange(C)[None, None, :]).any(axis=1)
-    mex = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
-    return mex, forb.all(axis=1)
+    return _forbidden_mex(nbrc, C, impl)
 
 
 # --------------------------------------------------------------------------
 # fused detect-and-recolor (RSOC, paper Alg. 3 inner loop, one chunk)
 # --------------------------------------------------------------------------
 
-def detect_recolor_ref(ell, colors, pri, row_start: int, U_rows, C: int):
+def detect_recolor_ref(ell, colors, pri, row_start: int, U_rows, C: int,
+                       impl: str = "bitset"):
     """For rows [row_start, row_start+R): if in U and defective (same color as
     a higher-priority neighbor), re-color with first-fit; else keep.
 
@@ -47,17 +64,17 @@ def detect_recolor_ref(ell, colors, pri, row_start: int, U_rows, C: int):
     defect = ((nbrc == c_r[:, None]) & (c_r[:, None] >= 0)
               & (nbrp > p_r[:, None])).any(axis=1)
     work = U_rows & defect
-    forb = (nbrc[:, :, None] == jnp.arange(C)[None, None, :]).any(axis=1)
-    mex = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
+    mex, ovf = _forbidden_mex(nbrc, C, impl)
     newc = jnp.where(work, mex, c_r)
-    return newc, work, forb.all(axis=1) & work
+    return newc, work, ovf & work
 
 
 # --------------------------------------------------------------------------
 # fused two-hop detect-and-recolor (native distance-2, one chunk)
 # --------------------------------------------------------------------------
 
-def twohop_ref(ell_rows, ell_all, colors, pri, row_start: int, U_rows, C: int):
+def twohop_ref(ell_rows, ell_all, colors, pri, row_start: int, U_rows, C: int,
+               impl: str = "bitset"):
     """Distance-2 analogue of ``detect_recolor_ref``: the forbidden set and
     the defect test read the colors of every vertex reachable in one or two
     hops — hop 2 re-gathers each neighbor's ELL row from ``ell_all``, so
@@ -89,10 +106,9 @@ def twohop_ref(ell_rows, ell_all, colors, pri, row_start: int, U_rows, C: int):
     defect = ((allc == c_r[:, None]) & (c_r[:, None] >= 0)
               & (allp > p_r[:, None])).any(axis=1)
     work = U_rows & defect
-    forb = (allc[:, :, None] == jnp.arange(C)[None, None, :]).any(axis=1)
-    mex = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
+    mex, ovf = _forbidden_mex(allc, C, impl)
     newc = jnp.where(work, mex, c_r)
-    return newc, work, forb.all(axis=1) & work
+    return newc, work, ovf & work
 
 
 # --------------------------------------------------------------------------

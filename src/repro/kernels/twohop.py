@@ -1,13 +1,15 @@
 """Pallas TPU kernel: fused two-hop detect-and-recolor (native distance-2).
 
-Two nested W-loops over the (BV, W) ELL tile feed ONE (BV, C) forbidden
-table: hop 1 gathers each row's neighbor colors, hop 2 re-gathers every
-neighbor's own ELL row from the full table — so G²'s adjacency is consumed
-on the fly inside VMEM and never materialized (|E(G²)| ≈ n·deg² would not
-fit anyway).  The same gathered colors feed both the distance-2 defect test
-(same color as a higher-priority vertex within two hops) and the first-fit
-recolor: the distance-2 expression of merging Alg. 2's phases into Alg. 3's
-single fused phase.
+Two nested W-loops over the (BV, W) ELL tile feed ONE packed (BV, C//32)
+forbidden bitset (DESIGN.md §10): hop 1 gathers each row's neighbor colors,
+hop 2 re-gathers every neighbor's own ELL row from the full table — so G²'s
+adjacency is consumed on the fly inside VMEM and never materialized
+(|E(G²)| ≈ n·deg² would not fit anyway).  Distance-2 is where the packed
+accumulator buys the most: C is largest here, and the 8× table shrink is
+VMEM the W² hop-2 gather panel gets back.  The same gathered colors feed
+both the distance-2 defect test (same color as a higher-priority vertex
+within two hops) and the first-fit recolor: the distance-2 expression of
+merging Alg. 2's phases into Alg. 3's single fused phase.
 
 A vertex is always its own two-hop neighbor (v -> w -> v through any
 neighbor w); those slots are masked so a row never forbids its own color.
@@ -25,6 +27,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core import bitset
 
 
 def _twohop_kernel(ell_ref, ell_all_ref, colors_ref, pri_ref, U_ref,
@@ -48,8 +52,7 @@ def _twohop_kernel(ell_ref, ell_all_ref, colors_ref, pri_ref, U_ref,
         nc = jnp.where(live, colors[safe], -1)
         npr = jnp.where(live, pri[safe], -1)
         defect = defect | ((nc == c_r) & (c_r >= 0) & (npr > p_r))
-        forb = forb | (nc[:, None]
-                       == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1))
+        forb = bitset.or_color(forb, nc, C)
         row2 = ell_all[safe]                  # (BV, W) two-hop ids via nbr j
 
         def hop2(jj, carry2):
@@ -60,20 +63,18 @@ def _twohop_kernel(ell_ref, ell_all_ref, colors_ref, pri_ref, U_ref,
             nc2 = jnp.where(live2, colors[safe2], -1)
             np2 = jnp.where(live2, pri[safe2], -1)
             defect2 = defect2 | ((nc2 == c_r) & (c_r >= 0) & (np2 > p_r))
-            forb2 = forb2 | (nc2[:, None]
-                             == jax.lax.broadcasted_iota(jnp.int32, (1, C), 1))
-            return forb2, defect2
+            return bitset.or_color(forb2, nc2, C), defect2
 
         return jax.lax.fori_loop(0, W, hop2, (forb, defect))
 
     forb, defect = jax.lax.fori_loop(
         0, W, hop1,
-        (jnp.zeros((BV, C), jnp.bool_), jnp.zeros((BV,), jnp.bool_)))
+        (bitset.init_words(BV, C), jnp.zeros((BV,), jnp.bool_)))
     work = U & defect
-    mex = jnp.argmin(forb.astype(jnp.int32), axis=1).astype(jnp.int32)
+    mex, ovf = bitset.mex_words(forb, C)
     newc_ref[...] = jnp.where(work, mex, c_r)
     rec_ref[...] = work
-    ovf_ref[...] = forb.all(axis=1) & work
+    ovf_ref[...] = ovf & work
 
 
 @functools.partial(jax.jit,

@@ -1,0 +1,250 @@
+"""Bit-parity property tests: packed-bitset forbidden sets vs the dense
+oracle (DESIGN.md §10).
+
+Unit level: pack / scatter-then-pack / mex / overflow must agree with the
+dense (rows, C) table + argmin formulation exactly, across word-aligned and
+ragged caps.  Engine level: every coloring engine run with
+``forbidden_impl="bitset"`` must reproduce the ``"dense"`` run bit-for-bit
+(colors AND summary — rounds, conflicts, retries), including the overflow
+COO side-channel, the native distance-2 two-hop path, and bipartite partial
+coloring, on rmat/mesh/bipartite families.
+
+Hypothesis-optional with a seeded-numpy fallback, like the rest of the
+harness (the container has no network; hard-requiring hypothesis would make
+the module uncollectable).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import bitset
+from repro.core import coloring as col
+from repro.core import distance2 as d2
+from repro.core.frontier import color_rsoc_compact
+from repro.graphs import generators as gen
+
+CAPS = (32, 64, 96, 256)
+
+
+# --------------------------------------------------------------------------
+# unit parity: pack / mex / overflow vs the dense formulation
+# --------------------------------------------------------------------------
+
+def _dense_forbidden(nbrc, C):
+    return np.asarray(col._forbidden_from_nbrc(jnp.asarray(nbrc), C))
+
+
+def _rand_nbrc(rng, rows, W, C):
+    """Neighbor-color panels incl. FILL (-1) and out-of-cap colors."""
+    nbrc = rng.integers(-1, int(C * 1.25) + 2, size=(rows, W))
+    return nbrc.astype(np.int32)
+
+
+@pytest.mark.parametrize("C", CAPS)
+def test_pack_matches_dense_table(C):
+    rng = np.random.default_rng(C)
+    nbrc = _rand_nbrc(rng, 64, 17, C)
+    words = bitset.pack_from_nbrc(jnp.asarray(nbrc), C)
+    assert words.shape == (64, bitset.n_words(C))
+    np.testing.assert_array_equal(np.asarray(bitset.to_dense(words, C)),
+                                  _dense_forbidden(nbrc, C))
+
+
+@pytest.mark.parametrize("C", CAPS)
+def test_mex_and_overflow_match_dense(C):
+    rng = np.random.default_rng(100 + C)
+    # mix of sparse rows, saturated rows (every color 0..C-1 present), and
+    # all-FILL rows — the three mex regimes
+    sparse = _rand_nbrc(rng, 32, 9, C)
+    full = np.tile(np.arange(C, dtype=np.int32), (8, 1))
+    empty = np.full((8, C), -1, np.int32)
+    for nbrc in (sparse, np.concatenate([full, empty])):
+        nbrc_j = jnp.asarray(nbrc)
+        dense = col._forbidden_from_nbrc(nbrc_j, C)
+        want_mex, want_ovf = col._mex(dense)
+        got_mex, got_ovf = bitset.mex_words(
+            bitset.pack_from_nbrc(nbrc_j, C), C)
+        np.testing.assert_array_equal(np.asarray(got_mex),
+                                      np.asarray(want_mex))
+        np.testing.assert_array_equal(np.asarray(got_ovf),
+                                      np.asarray(want_ovf))
+
+
+@pytest.mark.parametrize("C", [4, 40, 97])
+def test_ragged_caps_tail_masked(C):
+    """Caps that are not multiples of 32: tail bits must be pre-forbidden,
+    mex must never return >= C, overflow must mean 'all C colors taken'."""
+    rng = np.random.default_rng(C)
+    nbrc = _rand_nbrc(rng, 48, 11, C)
+    words = bitset.pack_from_nbrc(jnp.asarray(nbrc), C)
+    dense = col._forbidden_from_nbrc(jnp.asarray(nbrc), C)
+    want_mex, want_ovf = col._mex(dense)
+    got_mex, got_ovf = bitset.mex_words(words, C)
+    np.testing.assert_array_equal(np.asarray(got_mex), np.asarray(want_mex))
+    np.testing.assert_array_equal(np.asarray(got_ovf), np.asarray(want_ovf))
+    assert int(np.asarray(got_mex).max()) < C
+    # saturated row at a ragged cap
+    sat = np.tile(np.arange(C, dtype=np.int32), (2, 1))
+    m, o = bitset.mex_words(bitset.pack_from_nbrc(jnp.asarray(sat), C), C)
+    assert bool(np.asarray(o).all()) and int(np.asarray(m).max()) == 0
+
+
+@pytest.mark.parametrize("C", CAPS)
+def test_scatter_then_pack_matches_dense_coo(C):
+    """COO snapshot route: dense scatter -> pack == dense scatter."""
+    rng = np.random.default_rng(C + 7)
+    n_rows, m = 50, 300
+    src = rng.integers(-1, n_rows, size=m).astype(np.int32)
+    dst = rng.integers(-1, n_rows, size=m).astype(np.int32)
+    colors = rng.integers(-1, C + 20, size=n_rows).astype(np.int32)
+    a = (jnp.asarray(src), jnp.asarray(dst), jnp.asarray(colors))
+    dense = col._forbidden_coo(*a, n_rows, C)
+    packed = col._snapshot_coo(*a, n_rows, C, "bitset")
+    np.testing.assert_array_equal(
+        np.asarray(bitset.to_dense(packed, C)), np.asarray(dense))
+    # and the merged mex agrees
+    wm, wo = col._mex(dense)
+    gm, go = bitset.mex_words(packed, C)
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+    np.testing.assert_array_equal(np.asarray(go), np.asarray(wo))
+
+
+def test_or_color_incremental_equals_batch_pack():
+    """The kernels' per-column inline pack == the batch pack."""
+    rng = np.random.default_rng(5)
+    C, rows, W = 96, 40, 13
+    nbrc = _rand_nbrc(rng, rows, W, C)
+    forb = bitset.init_words(rows, C)
+    for j in range(W):
+        forb = bitset.or_color(forb, jnp.asarray(nbrc[:, j]), C)
+    np.testing.assert_array_equal(
+        np.asarray(forb),
+        np.asarray(bitset.pack_from_nbrc(jnp.asarray(nbrc), C)))
+
+
+def test_ws_accounting():
+    """The advertised shrink: 8x at word-aligned caps (4x floor at C=128
+    is the acceptance bar the benchmarks report)."""
+    for C in CAPS:
+        dense = bitset.ws_bytes(1000, C, "dense")
+        packed = bitset.ws_bytes(1000, C, "bitset")
+        assert dense == 1000 * C and packed == 1000 * bitset.n_words(C) * 4
+        assert dense / packed >= 4.0
+    assert bitset.ws_bytes(1, 128, "dense") / bitset.ws_bytes(
+        1, 128, "bitset") == 8.0
+    with pytest.raises(ValueError):
+        bitset.ws_bytes(1, 32, "nope")
+
+
+def test_unknown_impl_rejected():
+    with pytest.raises(ValueError):
+        col.color_rsoc(gen.mesh2d(4, 4), forbidden_impl="packed")
+
+
+# --------------------------------------------------------------------------
+# engine-level differential: bitset run == dense run, bit for bit
+# --------------------------------------------------------------------------
+
+GRAPHS = {
+    "rmat_b": lambda: gen.rmat_b(9, edge_factor=8),
+    "mesh3d": lambda: gen.mesh3d(5, 5, 5),
+    "bipartite": lambda: gen.bipartite_random(150, 100, 4.0, seed=7),
+}
+
+
+def _assert_identical(rb, rd, what):
+    np.testing.assert_array_equal(rb.colors, rd.colors, err_msg=what)
+    assert rb.summary() == rd.summary(), what
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("algo", sorted(col.ALGORITHMS))
+def test_engine_bitset_equals_dense(gname, algo):
+    g = GRAPHS[gname]()
+    fn = col.ALGORITHMS[algo]
+    _assert_identical(fn(g, seed=7, forbidden_impl="bitset"),
+                      fn(g, seed=7, forbidden_impl="dense"),
+                      f"{algo}/{gname}")
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_compact_bitset_equals_dense(gname):
+    g = GRAPHS[gname]()
+    _assert_identical(color_rsoc_compact(g, seed=3, forbidden_impl="bitset"),
+                      color_rsoc_compact(g, seed=3, forbidden_impl="dense"),
+                      f"rsoc_compact/{gname}")
+
+
+def test_overflow_coo_bitset_equals_dense():
+    """Capped-width hubs spill into the COO side-channel: the packed
+    snapshot path (scatter-then-pack) must reproduce the dense run."""
+    g = gen.rmat_b(9, edge_factor=16)
+    rb = col.color_rsoc(g, seed=3, ell_cap=8, forbidden_impl="bitset")
+    rd = col.color_rsoc(g, seed=3, ell_cap=8, forbidden_impl="dense")
+    _assert_identical(rb, rd, "rsoc/ovf")
+    assert col.is_proper(g, rb.colors)
+    cb = color_rsoc_compact(g, seed=3, ell_cap=8, forbidden_impl="bitset")
+    cd = color_rsoc_compact(g, seed=3, ell_cap=8, forbidden_impl="dense")
+    _assert_identical(cb, cd, "rsoc_compact/ovf")
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_distance2_bitset_equals_dense(gname):
+    g = GRAPHS[gname]()
+    nb = d2.color_distance2(g, seed=1, forbidden_impl="bitset")
+    nd = d2.color_distance2(g, seed=1, forbidden_impl="dense")
+    _assert_identical(nb, nd, f"d2/{gname}")
+    assert d2.is_distance_d_proper(g, nb.colors, 2)
+
+
+def test_bipartite_partial_bitset_equals_dense():
+    g = GRAPHS["bipartite"]()
+    pb = d2.color_bipartite_partial(g, 150, seed=1, forbidden_impl="bitset")
+    pd = d2.color_bipartite_partial(g, 150, seed=1, forbidden_impl="dense")
+    _assert_identical(pb, pd, "bipartite_partial")
+    assert d2.is_bipartite_partial_proper(g, 150, pb.colors)
+
+
+def test_cap_doubling_retry_bitset_equals_dense():
+    """Force overflow (tiny explicit C) so the shared _run_with_retry
+    doubles the cap: retry trajectory must match across impls."""
+    g = gen.mesh2d(12, 12)
+    rb = col.color_rsoc(g, seed=0, C=2, forbidden_impl="bitset")
+    rd = col.color_rsoc(g, seed=0, C=2, forbidden_impl="dense")
+    _assert_identical(rb, rd, "retry")
+    assert rb.retries > 0 and rb.overflow
+
+
+# --------------------------------------------------------------------------
+# randomized sweeps across caps (hypothesis when available, numpy fallback)
+# --------------------------------------------------------------------------
+
+def _check_pack_mex(nbrc, C):
+    nbrc_j = jnp.asarray(nbrc)
+    dense = col._forbidden_from_nbrc(nbrc_j, C)
+    want = col._mex(dense)
+    got = bitset.mex_words(bitset.pack_from_nbrc(nbrc_j, C), C)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**31 - 1), st.sampled_from(CAPS),
+           st.integers(1, 40), st.integers(1, 24))
+    @settings(max_examples=30, deadline=None)
+    def test_property_pack_mex_parity(seed, C, rows, W):
+        rng = np.random.default_rng(seed)
+        _check_pack_mex(_rand_nbrc(rng, rows, W, C), C)
+else:
+    @pytest.mark.parametrize("case", range(10))
+    def test_property_pack_mex_parity(case):
+        rng = np.random.default_rng(6000 + case)
+        C = CAPS[case % len(CAPS)]
+        rows, W = int(rng.integers(1, 40)), int(rng.integers(1, 24))
+        _check_pack_mex(_rand_nbrc(rng, rows, W, C), C)

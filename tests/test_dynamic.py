@@ -164,7 +164,7 @@ def test_uncolored_seed_repair_is_verified():
     n_pad = prob.n_pad
     colors0 = jnp.full((n_pad,), -1, jnp.int32)
     U0 = jnp.arange(n_pad) < prob.n
-    p_static = (prob.n, n_pad, prob.C, 1)
+    p_static = (prob.n, n_pad, prob.C, 1, col.DEFAULT_FORBIDDEN_IMPL)
     for loop, extra in ((col._rsoc_repair_loop, ()),
                         (frontier._repair_compact_loop, (n_pad,))):
         out = loop(prob.ell, prob.ovf_src, prob.ovf_dst, prob.pri,

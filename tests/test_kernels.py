@@ -1,5 +1,14 @@
 """Per-kernel parity tests: Pallas (interpret mode) vs pure-jnp oracle,
-swept over shapes and dtypes."""
+swept over shapes and dtypes.
+
+The coloring refs carry a forbidden-set ``impl`` switch ("bitset" packed
+words vs "dense" one-hot, DESIGN.md §10); parity is asserted against BOTH,
+so each test cross-checks three corners (kernel, bitset ref, dense ref).
+``REPRO_KERNEL_BACKEND`` selects the ops-dispatch backend the agreement
+tests pit against jnp — CI runs the module once per backend.
+"""
+import os
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -13,30 +22,38 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.twohop import twohop_detect_recolor
 
 
+# ops-dispatch backend under test (CI runs both: pallas_interpret and jnp)
+DISPATCH_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "pallas_interpret")
+REF_IMPLS = ("bitset", "dense")
+
+
 def _rand_ell(rng, R, W, n, frac_fill=0.3):
     ell = rng.integers(0, n, size=(R, W)).astype(np.int32)
     ell[rng.random((R, W)) < frac_fill] = -1
     return ell
 
 
+@pytest.mark.parametrize("impl", REF_IMPLS)
 @pytest.mark.parametrize("R,W,n,C", [
     (256, 8, 1024, 32), (512, 32, 512, 64), (256, 1, 64, 32), (1024, 16, 4096, 128),
 ])
-def test_firstfit_matches_ref(R, W, n, C):
+def test_firstfit_matches_ref(R, W, n, C, impl):
     rng = np.random.default_rng(R + W)
     ell = _rand_ell(rng, R, W, n)
     colors = rng.integers(-1, C - 1, size=(n,)).astype(np.int32)
     got_mex, got_ovf = firstfit(jnp.asarray(ell), jnp.asarray(colors), C=C,
                                 interpret=True)
-    want_mex, want_ovf = ref.firstfit_ref(jnp.asarray(ell), jnp.asarray(colors), C)
+    want_mex, want_ovf = ref.firstfit_ref(jnp.asarray(ell),
+                                          jnp.asarray(colors), C, impl=impl)
     np.testing.assert_array_equal(got_mex, want_mex)
     np.testing.assert_array_equal(got_ovf, want_ovf)
 
 
+@pytest.mark.parametrize("impl", REF_IMPLS)
 @pytest.mark.parametrize("R,W,n,C,row_start", [
     (256, 8, 1024, 32, 0), (256, 16, 1024, 64, 256), (512, 4, 2048, 32, 1024),
 ])
-def test_detect_recolor_matches_ref(R, W, n, C, row_start):
+def test_detect_recolor_matches_ref(R, W, n, C, row_start, impl):
     rng = np.random.default_rng(R * W)
     ell = _rand_ell(rng, R, W, n)
     colors = rng.integers(0, C // 2, size=(n,)).astype(np.int32)
@@ -46,16 +63,17 @@ def test_detect_recolor_matches_ref(R, W, n, C, row_start):
             jnp.asarray(U))
     got = detect_recolor(*args, row_start=row_start, C=C, interpret=True)
     want = ref.detect_recolor_ref(args[0], args[1], args[2], row_start,
-                                  args[3], C)
+                                  args[3], C, impl=impl)
     for g, w, name in zip(got, want, ("newc", "recolored", "ovf")):
         np.testing.assert_array_equal(g, w, err_msg=name)
 
 
+@pytest.mark.parametrize("impl", REF_IMPLS)
 @pytest.mark.parametrize("R,W,n,C,row_start", [
     (128, 4, 512, 32, 0), (128, 8, 512, 64, 128), (256, 2, 1024, 32, 256),
     (128, 6, 128, 32, 0),        # rows == whole table (self-heavy)
 ])
-def test_twohop_matches_ref(R, W, n, C, row_start):
+def test_twohop_matches_ref(R, W, n, C, row_start, impl):
     """Fused two-hop kernel vs jnp oracle, bit-for-bit."""
     rng = np.random.default_rng(R * W + C)
     ell_all = _rand_ell(rng, n, W, n)
@@ -68,16 +86,22 @@ def test_twohop_matches_ref(R, W, n, C, row_start):
     got = twohop_detect_recolor(*args, row_start=row_start, C=C,
                                 interpret=True)
     want = ref.twohop_ref(args[0], args[1], args[2], args[3], row_start,
-                          args[4], C)
+                          args[4], C, impl=impl)
     for g, w, name in zip(got, want, ("newc", "recolored", "ovf")):
         np.testing.assert_array_equal(g, w, err_msg=name)
 
 
+@pytest.mark.parametrize("impl", REF_IMPLS)
 @pytest.mark.parametrize("kernel", ["firstfit", "detect_recolor", "twohop"])
-def test_kernel_backends_agree_under_saturation(kernel):
-    """pallas_interpret vs jnp backends agree bit-for-bit through the ops
-    dispatch layer, on inputs dense enough that the forbidden set saturates
-    C on some rows — the overflow (ovf) flags must match too, and fire."""
+def test_kernel_backends_agree_under_saturation(kernel, impl):
+    """The env-selected dispatch backend vs the jnp oracle (in both
+    forbidden impls) agree bit-for-bit through the ops dispatch layer, on
+    inputs dense enough that the forbidden set saturates C on some rows —
+    the overflow (ovf) flags must match too, and fire.  Note C=4 is NOT a
+    multiple of 32: the packed path's tail-masking is load-bearing here."""
+    if DISPATCH_BACKEND == "jnp" and impl == "bitset":
+        pytest.skip("backend=jnp with impl=bitset is the identical "
+                    "invocation on both sides — nothing to compare")
     rng = np.random.default_rng(
         {"firstfit": 11, "detect_recolor": 22, "twohop": 33}[kernel])
     n, W, R, C = 512, 16, 256, 4
@@ -87,22 +111,23 @@ def test_kernel_backends_agree_under_saturation(kernel):
     U = np.ones(R, bool)
     if kernel == "firstfit":
         a = ops.firstfit(jnp.asarray(ell_all[:R]), jnp.asarray(colors), C=C,
-                         backend="jnp")
+                         backend="jnp", impl=impl)
         b = ops.firstfit(jnp.asarray(ell_all[:R]), jnp.asarray(colors), C=C,
-                         backend="pallas_interpret")
+                         backend=DISPATCH_BACKEND)
         ovf = a[1]
     elif kernel == "detect_recolor":
         args = (jnp.asarray(ell_all[:R]), jnp.asarray(colors),
                 jnp.asarray(pri), jnp.asarray(U))
-        a = ops.detect_recolor(*args, row_start=0, C=C, backend="jnp")
+        a = ops.detect_recolor(*args, row_start=0, C=C, backend="jnp",
+                               impl=impl)
         b = ops.detect_recolor(*args, row_start=0, C=C,
-                               backend="pallas_interpret")
+                               backend=DISPATCH_BACKEND)
         ovf = a[2]
     else:
         args = (jnp.asarray(ell_all[:R]), jnp.asarray(ell_all),
                 jnp.asarray(colors), jnp.asarray(pri), jnp.asarray(U))
-        a = ops.twohop(*args, row_start=0, C=C, backend="jnp")
-        b = ops.twohop(*args, row_start=0, C=C, backend="pallas_interpret")
+        a = ops.twohop(*args, row_start=0, C=C, backend="jnp", impl=impl)
+        b = ops.twohop(*args, row_start=0, C=C, backend=DISPATCH_BACKEND)
         ovf = a[2]
     for x, y in zip(a, b):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
@@ -163,3 +188,17 @@ def test_ops_dispatch_jnp_cpu():
     a = ops.firstfit(ell, colors, C=32, backend="auto")
     b = ops.firstfit(ell, colors, C=32, backend="pallas_interpret")
     np.testing.assert_array_equal(a[0], b[0])
+
+
+def test_ref_impls_agree_cross():
+    """bitset ref == dense ref on identical inputs (the unit-level corner
+    of the differential square; the engine level lives in test_bitset.py)."""
+    rng = np.random.default_rng(42)
+    for C in (32, 64, 96, 256):
+        ell = jnp.asarray(_rand_ell(rng, 128, 12, 256))
+        colors = jnp.asarray(
+            rng.integers(-1, C + 8, size=(256,)).astype(np.int32))
+        a = ref.firstfit_ref(ell, colors, C, impl="bitset")
+        b = ref.firstfit_ref(ell, colors, C, impl="dense")
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -70,6 +70,19 @@ def test_determinism_under_fixed_seed(gname, algo):
 
 @pytest.mark.parametrize("gname", sorted(GRAPHS))
 @pytest.mark.parametrize("algo", ALGOS)
+def test_forbidden_impl_parity(gname, algo):
+    """The packed-bitset forbidden path (DESIGN.md §10) is bit-identical to
+    the dense oracle on every engine: same colors, rounds, conflicts,
+    retries — so gather-pass counts cannot regress by construction."""
+    g = GRAPHS[gname]
+    rb = col.ALGORITHMS[algo](g, seed=7, forbidden_impl="bitset")
+    rd = col.ALGORITHMS[algo](g, seed=7, forbidden_impl="dense")
+    np.testing.assert_array_equal(rb.colors, rd.colors)
+    assert rb.summary() == rd.summary()
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("algo", ALGOS)
 def test_relabel_invariance(gname, algo):
     g = GRAPHS[gname]
     gs = shuffle_vertices(g, seed=11)
