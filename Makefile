@@ -1,7 +1,9 @@
 # CI entry points (see ROADMAP.md "Tier-1 verify" and DESIGN.md §9),
 # enforced on push/PR by .github/workflows/ci.yml.
 #
-#   make test         tier-1 test suite (the gate every PR must keep green)
+#   make test         tier-1 test suite (the gate every PR must keep green;
+#                     includes the public-API surface snapshot,
+#                     tests/test_api_surface.py vs tests/api_surface.json)
 #   make bench-smoke  tiny-graph run of every benchmark section — catches
 #                     import rot and shape bugs in minutes, not numbers;
 #                     writes BENCH_<section>.json (uploaded as CI artifacts)

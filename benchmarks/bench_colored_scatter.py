@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Csv, suite, time_fn
-from repro.core import coloring as col
 from repro.core.schedule import edge_color_by_dst
 from repro.graphs.csr import CSRGraph, from_edges, to_edge_list
 from repro.models.gnn import colored_segment_sum

@@ -9,7 +9,7 @@ which is the paper's Figs 3-6 claim."""
 from __future__ import annotations
 
 from benchmarks.common import Csv, forb_ws_mb, suite
-from repro.core import coloring as col
+from repro import api
 
 
 def main(scale: str = "small") -> None:
@@ -19,11 +19,13 @@ def main(scale: str = "small") -> None:
     for gname, g in graphs.items():
         for n_chunks in (1, 2, 4, 8, 16, 32, 64):
             for algo in ("cat", "rsoc"):
-                res = col.ALGORITHMS[algo](g, seed=1, n_chunks=n_chunks)
+                res = api.color(g, algorithm=algo, seed=1,
+                                n_chunks=n_chunks)
                 csv.row(gname, algo, n_chunks,
                         max(g.n_vertices // n_chunks, 1),
                         res.total_conflicts, res.n_rounds, res.n_colors,
-                        forb_ws_mb(g.n_vertices, n_chunks, res.final_C))
+                        forb_ws_mb(g.n_vertices, n_chunks, res.final_C),
+                        spec=res.spec)
 
 
 if __name__ == "__main__":

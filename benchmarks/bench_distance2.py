@@ -13,8 +13,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Csv, forb_ws_mb, suite, time_fn
-from repro.core import coloring as col
-from repro.core.distance2 import color_distance2
+from repro import api
 from repro.graphs.csr import CSRGraph, power_graph
 
 
@@ -53,22 +52,26 @@ def main(scale: str = "small") -> None:
             ws_mat = ws_mb_materialized(gd)
             mat_ms = {}
             for algo in ("cat", "rsoc"):
-                sec, res = time_fn(col.ALGORITHMS[algo], gd, seed=1,
-                                   repeats=2)
+                # materialized path: distance-1 coloring of the explicit G^d
+                spec = api.ColoringSpec(algorithm=algo, seed=1)
+                sec, res = time_fn(api.color, gd, spec, repeats=2)
                 mat_ms[algo] = (build_s + sec) * 1e3
                 csv.row(gname, d, "materialized", avg_deg, algo,
                         mat_ms[algo], res.n_rounds, res.gather_passes,
                         res.total_conflicts, res.n_colors, ws_mat,
-                        forb_ws_mb(gd.n_vertices, 16, res.final_C))
+                        forb_ws_mb(gd.n_vertices, 16, res.final_C),
+                        spec=res.spec)
             if d != 2:
                 continue
-            sec, res = time_fn(color_distance2, g, seed=1, repeats=2)
+            spec = api.ColoringSpec(algorithm="rsoc", distance=2, seed=1)
+            sec, res = time_fn(api.color, g, spec, repeats=2)
             nat_ms = sec * 1e3
             ws_nat = ws_mb_native(g)
             csv.row(gname, d, "native", avg_deg, "rsoc", nat_ms,
                     res.n_rounds, res.gather_passes, res.total_conflicts,
                     res.n_colors, ws_nat,
-                    forb_ws_mb(g.n_vertices, 16, res.final_C))
+                    forb_ws_mb(g.n_vertices, 16, res.final_C),
+                    spec=res.spec)
             print(f"# native-vs-materialized {gname} d=2: "
                   f"native {nat_ms:.1f}ms / {ws_nat:.2f}MB ws  vs  "
                   f"materialized(rsoc) {mat_ms['rsoc']:.1f}ms / "

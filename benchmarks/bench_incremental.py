@@ -6,7 +6,8 @@ set from the endpoints of changed edges and runs the frontier-compacted
 fused pass, so both the neighbor-gather pass count and the bytes moved per
 pass shrink with the batch.  We sweep update-batch sizes (as a fraction of
 the undirected edge count, half inserts / half deletes) on an RMAT-G and a
-power-law RMAT-B graph and compare against a full ``color_rsoc`` rerun.
+power-law RMAT-B graph and compare against a full from-scratch
+``repro.api.color`` (RSOC) rerun.
 
 The acceptance check of the dynamic subsystem rides here: at the default
 scale (2^16-vertex RMAT) a 1%-of-edges batch must stay proper and take
@@ -19,8 +20,9 @@ import time
 import numpy as np
 
 from benchmarks.common import Csv, forb_ws_mb, time_fn
+from repro import api
 from repro.core import coloring as col
-from repro.dynamic import dynamic_state, recolor_incremental, state_to_csr
+from repro.dynamic import recolor_incremental, state_to_csr
 from repro.graphs import generators as gen
 from repro.graphs.csr import to_edge_list
 
@@ -55,8 +57,10 @@ def main(scale: str = "small") -> None:
     for gname, g in graphs.items():
         und = _undirected_edges(g)
         m = len(und)
-        scratch_s, scratch = time_fn(col.color_rsoc, g, seed=1, repeats=3)
-        st0 = dynamic_state(g, seed=1)
+        scratch_spec = api.ColoringSpec(algorithm="rsoc", seed=1)
+        scratch_s, scratch = time_fn(api.color, g, scratch_spec, repeats=3)
+        res0 = api.color(g, mode="incremental", seed=1)
+        st0, inc_spec = res0.state, res0.spec
         for frac in BATCH_FRACS:
             k = max(2, int(m * frac))
             st = st0
@@ -81,7 +85,8 @@ def main(scale: str = "small") -> None:
                     scratch_s / inc_s if inc_s else float("inf"),
                     scratch.gather_passes / max(inc_passes, 1),
                     proper,
-                    forb_ws_mb(st.frontier_cap, st.n_chunks, st.C))
+                    forb_ws_mb(st.frontier_cap, st.n_chunks, st.C),
+                    spec=inc_spec)
             if abs(frac - 0.01) < 1e-12:
                 ok = proper and inc_passes < scratch.gather_passes
                 print(f"# acceptance[{gname}]: 1% batch proper={proper} "

@@ -10,7 +10,7 @@ Timings are per algorithm end-to-end (jit-compiled, warmup excluded).
 from __future__ import annotations
 
 from benchmarks.common import Csv, forb_ws_mb, suite, time_fn
-from repro.core import coloring as col
+from repro import api
 
 
 def main(scale: str = "small") -> None:
@@ -20,11 +20,8 @@ def main(scale: str = "small") -> None:
     for gname, g in graphs.items():
         base_ms = None
         for algo in ("cat", "rsoc", "rsoc_compact"):
-            if algo == "rsoc_compact":
-                from repro.core.frontier import color_rsoc_compact as fn
-            else:
-                fn = col.ALGORITHMS[algo]
-            sec, res = time_fn(fn, g, seed=1, repeats=3)
+            spec = api.ColoringSpec(algorithm=algo, seed=1)
+            sec, res = time_fn(api.color, g, spec, repeats=3)
             ms = sec * 1e3
             if algo == "cat":
                 base_ms = ms
@@ -32,7 +29,8 @@ def main(scale: str = "small") -> None:
                     base_ms / ms if base_ms else 1.0,
                     res.n_rounds, res.gather_passes, res.total_conflicts,
                     res.n_colors,
-                    forb_ws_mb(g.n_vertices, 16, res.final_C))
+                    forb_ws_mb(g.n_vertices, 16, res.final_C),
+                    spec=res.spec)
 
 
 if __name__ == "__main__":

@@ -69,10 +69,18 @@ class Csv:
         self.rows = []
         print(",".join(self.header), flush=True)
 
-    def row(self, *vals):
+    def row(self, *vals, spec=None):
+        """Emit one CSV row.  ``spec`` (a ``repro.api.ColoringSpec``) is not
+        printed, but under ``run.py --json`` it lands in the JSON row as the
+        resolved spec dict plus its stable ``spec_key`` — every coloring row
+        records exactly which task produced it."""
         if _json_rows is not None:
-            _json_rows.append(
-                {h: _jsonable(v) for h, v in zip(self.header, vals)})
+            d = {h: _jsonable(v) for h, v in zip(self.header, vals)}
+            if spec is not None:
+                resolved = spec.resolved()
+                d["spec"] = resolved.asdict()
+                d["spec_key"] = resolved.spec_key()
+            _json_rows.append(d)
         vals = [f"{v:.6g}" if isinstance(v, float) else str(v) for v in vals]
         self.rows.append(vals)
         print(",".join(vals), flush=True)

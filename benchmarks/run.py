@@ -14,9 +14,11 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--scale=NAME] [--json]
 
 ``--json`` additionally writes BENCH_<section>.json per section (schema:
 {"section", "scale", "rows": [{... every CSV column, plus the normalized
-keys graph/algo/ms/ws_mb/colors/gather_passes when the section has them}]})
-so the perf trajectory is machine-trackable across PRs; CI uploads these as
-artifacts.
+keys graph/algo/ms/ws_mb/colors/gather_passes/spec_key/spec when the
+section has them}]}) so the perf trajectory is machine-trackable across
+PRs; CI uploads these as artifacts.  ``spec``/``spec_key`` echo the
+resolved ``repro.api.ColoringSpec`` of the row's coloring call (DESIGN.md
+§11), so trajectories key on the exact task, not just the column values.
 
 Unknown section names abort *before* anything runs — a typo must not
 silently skip a benchmark after minutes of earlier sections.
@@ -32,9 +34,11 @@ SECTIONS = ["table1", "conflicts", "colors", "forbidden", "distance2",
             "colored_scatter", "incremental", "lm_step"]
 SCALES = ["tiny", "small", "medium"]
 
-# keys every BENCH_*.json row carries (None when the section lacks them)
+# keys every BENCH_*.json row carries (None when the section lacks them);
+# spec/spec_key are the resolved repro.api.ColoringSpec of the row's coloring
+# call (None for rows that never invoke a coloring engine, e.g. lm_step)
 NORMALIZED_KEYS = ("graph", "algo", "ms", "ws_mb", "colors",
-                   "gather_passes")
+                   "gather_passes", "spec_key", "spec")
 
 
 def lm_step(scale: str = "small") -> None:

@@ -8,6 +8,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.core import coloring as col
 from repro.data.pipeline import FullGraphStream
 from repro.graphs import generators as gen
@@ -17,7 +18,7 @@ from repro.training.optimizer import (OptimizerConfig, adamw_update,
 
 # 1. the mesh + its coloring (dependency analysis for parallel mesh kernels)
 g = gen.mesh2d(48, 48)
-res = col.color_rsoc(g, seed=0)
+res = api.color(g, algorithm="rsoc", seed=0)
 assert col.is_proper(g, res.colors)
 print(f"mesh: {g.n_vertices} vertices; RSOC: {res.n_colors} colors in "
       f"{res.n_rounds} rounds / {res.gather_passes} passes")

@@ -1,9 +1,15 @@
-"""Quickstart: color a graph with RSOC and inspect the result.
+"""Quickstart: color a graph through the one front door, repro.api.color.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Every engine — the paper's RSOC, its predecessors, frontier compaction,
+native distance-2, bipartite partial, incremental — is selected by a
+``ColoringSpec`` (algorithm / distance / mode / backend), not by a separate
+function (DESIGN.md §11).
 """
 import numpy as np
 
+from repro import api
 from repro.core import coloring as col
 from repro.graphs import generators as gen
 
@@ -12,21 +18,45 @@ g = gen.mesh3d(16, 16, 16)
 print(f"graph: {g.n_vertices} vertices, {g.n_edges} directed edges, "
       f"max degree {g.max_degree}")
 
-# 2. color it with the paper's algorithm (RSOC) and its predecessor (CAT)
-for name, fn in [("CAT  (Catalyurek et al.)", col.color_cat),
-                 ("RSOC (this paper)", col.color_rsoc)]:
-    res = fn(g, seed=0)
+# 2. color it with the paper's algorithm (RSOC) and its predecessor (CAT):
+#    same entry point, different spec
+for name, spec in [("CAT  (Catalyurek et al.)", api.ColoringSpec("cat")),
+                   ("RSOC (this paper)", api.ColoringSpec("rsoc"))]:
+    res = api.color(g, spec, seed=0)
     assert col.is_proper(g, res.colors)
     print(f"{name}: {res.n_colors} colors, {res.n_rounds} rounds, "
           f"{res.total_conflicts} conflicts, "
           f"{res.gather_passes} neighbor-gather passes")
 
-# 3. compare against the serial First-Fit oracle
+# 3. the result echoes the resolved spec — feed it back in to replay
+res = api.color(g, algorithm="rsoc", seed=0)
+replay = api.color(g, res.spec)
+assert np.array_equal(res.colors, replay.colors)
+print(f"resolved spec key: {res.spec.spec_key()}")
+
+# 4. the whole support matrix is one registry
+print("supported specs:")
+for row in api.supported_specs():
+    print(f"  algorithm={row['algorithm']:<13} distance={row['distance']} "
+          f"mode={row['mode']:<12} backend={row['backend']:<12} "
+          f"(replaces {row['replaces']})")
+
+# 5. other engines are just other specs: native distance-2 (G^2 colored
+#    without ever materializing it)
+res2 = api.color(g, distance=2, seed=0)
+print(f"distance-2: {res2.n_colors} colors (distance={res2.distance})")
+
+# 6. compare against the serial First-Fit oracle
 serial = col.greedy_sequential(g)
 print(f"serial First-Fit: {col.n_colors_used(serial)} colors")
 
-# 4. use the coloring: independent sets for safe parallel execution
-res = col.color_rsoc(g, seed=0)
+# 7. use the coloring: independent sets for safe parallel execution
 sizes = np.bincount(res.colors)
 print(f"independent-set sizes: {sizes.tolist()}")
 print("largest set =", sizes.max(), "vertices can be processed in parallel")
+
+# 8. unsupported combos fail loudly, naming the nearest supported spec
+try:
+    api.color(g, algorithm="cat", distance=2)
+except ValueError as e:
+    print(f"unsupported combo rejected: {e}")

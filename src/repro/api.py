@@ -1,0 +1,213 @@
+"""One front door for every coloring engine: ``repro.api.color`` (DESIGN.md §11).
+
+Rokos et al.'s contribution is one speculative detect-and-recolor scheme that
+subsumes its predecessors, and the optimistic loop extends unchanged to
+distance-2, bipartite partial, incremental and distributed coloring — so the
+public API is one entry point parameterized by a **spec**, not one function
+per variant:
+
+    from repro import api
+
+    res = api.color(g)                                       # RSOC, defaults
+    res = api.color(g, algorithm="cat", n_chunks=32)         # overrides
+    spec = api.ColoringSpec(algorithm="rsoc", distance=2, seed=1)
+    res = api.color(g, spec)                                 # explicit spec
+    res.spec                                                 # resolved echo
+
+Engines live in a registry keyed by ``(algorithm, distance, mode, backend)``
+(``repro.registry``); ``core/coloring.py``, ``core/frontier.py``,
+``core/distance2.py``, ``core/distributed.py`` and ``dynamic/incremental.py``
+register theirs at import time, and new engines (distance-d, star/acyclic)
+are new registry entries, not new public functions.  Unsupported combos are
+rejected by ``ColoringSpec.validate`` with the nearest supported spec named.
+
+The legacy ``color_*`` entry points survive one release as deprecation shims
+routing through this module (bit-identical by construction; each warns once),
+and ``repro.core.ALGORITHMS`` is a live registry view.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro import registry
+from repro.registry import register_engine  # noqa: F401  (re-export)
+from repro.core.context import (DEFAULT_FORBIDDEN_IMPL, PassContext,
+                                resolve_impl)
+from repro.core.coloring import ColoringResult
+
+# importing the engine modules populates the registry (order is not
+# significant; each module registers its own combos)
+from repro.core import coloring as _coloring        # noqa: F401
+from repro.core import frontier as _frontier        # noqa: F401
+from repro.core import distance2 as _distance2      # noqa: F401
+from repro.core import distributed as _distributed  # noqa: F401
+from repro.dynamic import incremental as _incremental  # noqa: F401
+
+MODES = ("static", "incremental", "partial")
+BACKENDS = ("local", "distributed")
+
+
+@dataclasses.dataclass(frozen=True)
+class ColoringSpec:
+    """Complete, hashable description of a coloring task (minus the graph).
+
+    The four axes ``algorithm`` / ``distance`` / ``mode`` / ``backend``
+    select the engine from the registry; the remaining fields parameterize
+    it.  Fields an engine does not consume are inert (e.g. ``max_rounds``
+    for gm, ``n_chunks`` for jp) — the support matrix in DESIGN.md §11
+    records which fields bite where.
+    """
+
+    algorithm: str = "rsoc"        # rsoc | cat | gm | jp | rsoc_compact
+    distance: int = 1              # 1 | 2 (native two-hop; d>2 on ROADMAP)
+    mode: str = "static"           # static | incremental | partial
+    backend: str = "local"         # local | distributed (needs mesh=)
+    seed: int = 0                  # relabel + priority RNG seed
+    C: Optional[int] = None        # color cap (None: engine picks, then
+                                   # doubles on overflow; result.final_C)
+    n_chunks: int = 16             # sequential chunks/pass (1/threads)
+    max_rounds: int = 1000         # repair-round bound
+    forbidden_impl: Optional[str] = None   # bitset | dense (None: default)
+    ell_cap: int = 512             # ELL width cap; hubs spill to COO
+    relabel: bool = True           # host-side random vertex relabel
+    frontier_frac: float = 0.125   # compacted-frontier capacity fraction
+    n_left: Optional[int] = None   # mode="partial": bipartite left size
+    ell_slack: int = 4             # mode="incremental": free ELL slots/row
+    ovf_cap: Optional[int] = None  # mode="incremental": overflow buffer cap
+    delta_cap: int = 2048          # mode="incremental": update-slice width
+
+    # -- resolution / validation -------------------------------------------
+
+    def resolved(self) -> "ColoringSpec":
+        """Spec with every defaultable field pinned (what ``color`` echoes
+        into ``ColoringResult.spec``): same spec in => same colors out."""
+        return dataclasses.replace(
+            self, forbidden_impl=resolve_impl(self.forbidden_impl))
+
+    def validate(self) -> "ColoringSpec":
+        """Reject malformed fields and unsupported combos with actionable
+        errors (the nearest supported spec is named)."""
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; known: {MODES}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; known: {BACKENDS}")
+        resolve_impl(self.forbidden_impl)   # raises on unknown impl
+        if self.n_chunks < 1:
+            raise ValueError(f"n_chunks must be >= 1 (got {self.n_chunks})")
+        if self.max_rounds < 1:
+            raise ValueError(
+                f"max_rounds must be >= 1 (got {self.max_rounds})")
+        if self.C is not None and self.C < 1:
+            raise ValueError(f"C must be >= 1 or None (got {self.C})")
+        if self.ell_cap < 1:
+            raise ValueError(f"ell_cap must be >= 1 (got {self.ell_cap})")
+        if not 0.0 < self.frontier_frac <= 1.0:
+            raise ValueError(
+                f"frontier_frac must be in (0, 1] (got {self.frontier_frac})")
+        if self.mode == "partial":
+            if self.n_left is None:
+                raise ValueError(
+                    "mode='partial' requires n_left (the bipartite "
+                    "left-side size to color)")
+        elif self.n_left is not None:
+            raise ValueError(
+                f"n_left is only meaningful with mode='partial' "
+                f"(got mode={self.mode!r})")
+        key = (self.algorithm, self.distance, self.mode, self.backend)
+        if not registry.has_engine(*key):
+            near = registry.nearest_key(key)
+            raise ValueError(
+                f"no engine registered for {registry.format_key(key)}; "
+                f"nearest supported spec: {registry.format_key(near)} "
+                f"(full matrix: repro.api.supported_specs())")
+        return self
+
+    # -- identity ----------------------------------------------------------
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def spec_key(self) -> str:
+        """Stable one-line identity of the *resolved* spec, recorded in
+        every BENCH_*.json row so perf trajectories key on the exact task."""
+        s = self.resolved()
+        return ";".join(f"{f.name}={getattr(s, f.name)}"
+                        for f in dataclasses.fields(s))
+
+
+SPEC_FIELDS = tuple(f.name for f in dataclasses.fields(ColoringSpec))
+
+
+def color(g, spec: Optional[ColoringSpec] = None, *,
+          mesh=None, axis: Optional[str] = None,
+          **overrides) -> ColoringResult:
+    """Color graph ``g`` per ``spec`` (defaults + ``**overrides``).
+
+    ``overrides`` are ``ColoringSpec`` field replacements applied on top of
+    ``spec`` (or on the default spec).  ``mesh``/``axis`` are runtime device
+    arguments for ``backend='distributed'`` — they select hardware, not the
+    task, so they are not spec fields.
+
+    Returns a ``ColoringResult`` whose ``spec`` field echoes the resolved
+    spec (reproducibility: feed it back in to replay the run) and, for
+    ``mode='incremental'``, whose ``state`` field carries the
+    ``DynamicColoringState`` for subsequent ``recolor_incremental`` batches.
+    """
+    if spec is None:
+        spec = ColoringSpec()
+    elif not isinstance(spec, ColoringSpec):
+        raise TypeError(
+            f"spec must be a ColoringSpec (got {type(spec).__name__}); "
+            f"pass field overrides as keyword arguments")
+    if overrides:
+        unknown = sorted(set(overrides) - set(SPEC_FIELDS))
+        if unknown:
+            raise TypeError(
+                f"unknown ColoringSpec override(s) {unknown}; "
+                f"spec fields: {list(SPEC_FIELDS)}")
+        spec = dataclasses.replace(spec, **overrides)
+    spec = spec.resolved()
+    spec.validate()
+    engine = registry.get_engine(spec.algorithm, spec.distance, spec.mode,
+                                 spec.backend)
+    kw = {}
+    if spec.backend == "distributed":
+        kw["mesh"] = mesh           # engine raises if None
+        kw["axis"] = axis if axis is not None else "data"
+    elif mesh is not None or axis is not None:
+        raise ValueError(
+            f"mesh=/axis= are only meaningful with backend='distributed' "
+            f"(spec.backend={spec.backend!r})")
+    return dataclasses.replace(engine(g, spec, **kw), spec=spec)
+
+
+def supported_specs() -> list[dict]:
+    """The registry's support matrix: one row per registered engine combo,
+    with the legacy entry point it replaces (DESIGN.md §11)."""
+    return [{"algorithm": a, "distance": d, "mode": m, "backend": b,
+             "replaces": fn.replaces}
+            for (a, d, m, b), fn in registry.engine_items()]
+
+
+def algorithms(distance: int = 1, mode: str = "static",
+               backend: str = "local") -> list[str]:
+    """Algorithm names registered for a given (distance, mode, backend)."""
+    return sorted({a for (a, d, m, b) in registry.engine_keys()
+                   if (d, m, b) == (distance, mode, backend)})
+
+
+__all__ = [
+    "BACKENDS",
+    "ColoringResult",
+    "ColoringSpec",
+    "DEFAULT_FORBIDDEN_IMPL",
+    "MODES",
+    "PassContext",
+    "SPEC_FIELDS",
+    "algorithms",
+    "color",
+    "register_engine",
+    "supported_specs",
+]

@@ -2,6 +2,9 @@
 predecessors, adapted for lockstep SPMD (TPU/JAX) execution, single-device and
 multi-device (shard_map halo/replicated exchange).
 """
+from repro.core.context import (  # noqa: F401
+    DEFAULT_FORBIDDEN_IMPL, PassContext, resolve_impl,
+)
 from repro.core.coloring import (  # noqa: F401
     ALGORITHMS, ColoringResult, color_cat, color_gm, color_jp, color_rsoc,
     greedy_sequential, is_proper, n_colors_used,

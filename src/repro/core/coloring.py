@@ -38,30 +38,24 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from collections.abc import Mapping
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import registry
 from repro.core import bitset
+from repro.core.context import (DEFAULT_FORBIDDEN_IMPL, PassContext,
+                                resolve_impl)
 from repro.graphs.csr import CSRGraph, FILL, from_edges, to_edge_list, to_ell
 
 MAX_ROUNDS_TRACE = 64  # fixed-size conflict trace (while_loop-friendly)
 
-# Forbidden-set representation used by every engine: "bitset" packs the
-# (rows, C) table into (rows, C//32) int32 words (core/bitset.py), "dense"
-# keeps the uint8 table and argmin mex — retained as the differential
-# oracle.  Engines take ``forbidden_impl=None`` => this default.
-DEFAULT_FORBIDDEN_IMPL = "bitset"
-
-
-def _resolve_impl(impl: Optional[str]) -> str:
-    impl = DEFAULT_FORBIDDEN_IMPL if impl is None else impl
-    if impl not in bitset.IMPLS:
-        raise ValueError(
-            f"unknown forbidden_impl {impl!r}; known: {bitset.IMPLS}")
-    return impl
+# back-compat alias: the canonical definition moved to core/context.py with
+# the PassContext it configures (DESIGN.md §11)
+_resolve_impl = resolve_impl
 
 
 # --------------------------------------------------------------------------
@@ -80,6 +74,12 @@ class ColoringResult:
     final_C: int = 0               # color cap actually used (after doublings)
     retries: int = 0               # cap-doubling re-runs (0 = first cap fit)
     distance: int = 1              # coloring distance (2 = native two-hop)
+    # the resolved repro.api.ColoringSpec that produced this result, echoed
+    # by api.color for reproducibility (None on direct engine calls); typed
+    # as object because this module must not import repro.api
+    spec: Optional[object] = None
+    # mode="incremental" only: the DynamicColoringState behind the colors
+    state: Optional[object] = None
 
     def summary(self) -> dict:
         return {"rounds": int(self.n_rounds),
@@ -214,7 +214,7 @@ def _mex(forb):
 
 # ---- forbidden-set representation dispatch (bitset | dense) --------------
 #
-# ``impl`` rides in p_static, so it is a jit-cache key like C and n_chunks;
+# ``impl`` rides in ctx, so it is a jit-cache key like C and n_chunks;
 # the passes below only ever touch forbidden tables through these four
 # helpers, which keeps the two representations bit-identical by contract
 # (tests/test_bitset.py enforces it).
@@ -276,7 +276,7 @@ def _forbidden_from_nbrc(nbrc, C):
     return forb.at[r, jnp.clip(nbrc, 0, C - 1)].max(ok.astype(jnp.uint8))
 
 
-def _chunked_pass(p_static, ell, osrc, odst, pri, colors, U, force, *,
+def _chunked_pass(ctx, ell, osrc, odst, pri, colors, U, force, *,
                   detect: bool):
     """One sequential sweep over n_chunks chunks.
 
@@ -285,7 +285,7 @@ def _chunked_pass(p_static, ell, osrc, odst, pri, colors, U, force, *,
                                 defective right now (fresh check), or forced.
     Returns (colors, recolored_mask, n_defects, overflowed).
     """
-    n, n_pad, C, n_chunks, impl = p_static
+    n, n_pad, C, n_chunks, impl = ctx.unpack()
     cs = n_pad // n_chunks
     valid_row = jnp.arange(n_pad) < n
     has_ovf = osrc.shape[0] > 0
@@ -333,9 +333,9 @@ def _chunked_pass(p_static, ell, osrc, odst, pri, colors, U, force, *,
     return jax.lax.fori_loop(0, n_chunks, chunk_body, init)
 
 
-def _detect_pass(p_static, ell, osrc, odst, pri, colors, U):
+def _detect_pass(ctx, ell, osrc, odst, pri, colors, U):
     """CAT phase B: standalone defect detection over U (full gather pass)."""
-    n, n_pad, C, n_chunks, impl = p_static
+    n, n_pad, C, n_chunks, impl = ctx.unpack()
     valid_row = jnp.arange(n_pad) < n
     nbrc, nbrp = _gather_nbr(ell, colors, pri)
     defect = ((nbrc == colors[:, None]) & (colors[:, None] >= 0)
@@ -349,7 +349,7 @@ def _detect_pass(p_static, ell, osrc, odst, pri, colors, U):
 # algorithm loops
 # --------------------------------------------------------------------------
 
-def _fused_repair(p_static, ell, osrc, odst, pri, colors, U, max_rounds,
+def _fused_repair(ctx, ell, osrc, odst, pri, colors, U, max_rounds,
                   ovf0=False):
     """Fused detect-and-recolor rounds from an arbitrary (colors, U) start.
 
@@ -360,7 +360,7 @@ def _fused_repair(p_static, ell, osrc, odst, pri, colors, U, max_rounds,
     their first pass.  Returns (colors, n_rounds, trace, total_defects, ovf)
     — one neighbor-gather pass per round.
     """
-    n, n_pad, C, n_chunks, impl = p_static
+    n, n_pad, C, n_chunks, impl = ctx.unpack()
 
     def cond(s):
         # terminate when a full fused pass detected zero defects: colors were
@@ -373,7 +373,7 @@ def _fused_repair(p_static, ell, osrc, odst, pri, colors, U, max_rounds,
         force = U & (colors < 0)
         # ONE fused detect-and-recolor pass
         colors2, recolored, n_def, ovf2 = _chunked_pass(
-            p_static, ell, osrc, odst, pri, colors, U, force, detect=True)
+            ctx, ell, osrc, odst, pri, colors, U, force, detect=True)
         trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(n_def)
         # forced vertices were colored speculatively, not verified: keep the
         # loop alive so the next pass checks them (two adjacent uncolored
@@ -389,42 +389,42 @@ def _fused_repair(p_static, ell, osrc, odst, pri, colors, U, max_rounds,
     return colors, r, trace, tot, ovf
 
 
-@functools.partial(jax.jit, static_argnames=("p_static", "max_rounds"))
-def _rsoc_loop(ell, osrc, odst, pri, p_static, max_rounds):
-    n, n_pad, C, n_chunks, impl = p_static
+@functools.partial(jax.jit, static_argnames=("ctx", "max_rounds"))
+def _rsoc_loop(ell, osrc, odst, pri, ctx, max_rounds):
+    n, n_pad, C, n_chunks, impl = ctx.unpack()
     colors0 = jnp.full((n_pad,), -1, jnp.int32)
     valid = jnp.arange(n_pad) < n
     zeros = jnp.zeros((n_pad,), bool)
 
     # round 0: tentative coloring of the whole graph (chunked, fresh)
     colors1, U, _, ovf0 = _chunked_pass(
-        p_static, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
+        ctx, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
     colors, r, trace, tot, ovf = _fused_repair(
-        p_static, ell, osrc, odst, pri, colors1, U, max_rounds, ovf0)
+        ctx, ell, osrc, odst, pri, colors1, U, max_rounds, ovf0)
     return colors[:n], r, trace, tot, ovf
 
 
-@functools.partial(jax.jit, static_argnames=("p_static", "max_rounds"))
-def _rsoc_repair_loop(ell, osrc, odst, pri, colors, U, p_static, max_rounds):
+@functools.partial(jax.jit, static_argnames=("ctx", "max_rounds"))
+def _rsoc_repair_loop(ell, osrc, odst, pri, colors, U, ctx, max_rounds):
     """Externally-seeded fused repair (full-width passes; no round 0)."""
-    n, n_pad, C, n_chunks, impl = p_static
+    n, n_pad, C, n_chunks, impl = ctx.unpack()
     colors, r, trace, tot, ovf = _fused_repair(
-        p_static, ell, osrc, odst, pri, colors, U, max_rounds)
+        ctx, ell, osrc, odst, pri, colors, U, max_rounds)
     return colors, r, trace, tot, ovf
 
 
-@functools.partial(jax.jit, static_argnames=("p_static", "max_rounds"))
-def _cat_loop(ell, osrc, odst, pri, p_static, max_rounds):
-    n, n_pad, C, n_chunks, impl = p_static
+@functools.partial(jax.jit, static_argnames=("ctx", "max_rounds"))
+def _cat_loop(ell, osrc, odst, pri, ctx, max_rounds):
+    n, n_pad, C, n_chunks, impl = ctx.unpack()
     colors0 = jnp.full((n_pad,), -1, jnp.int32)
     valid = jnp.arange(n_pad) < n
     zeros = jnp.zeros((n_pad,), bool)
 
     # round 0 phase A: color everything (chunked, fresh within pass)
     colors1, _, _, ovf0 = _chunked_pass(
-        p_static, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
+        ctx, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
     # round 0 phase B: detect                                   (pass 2)
-    U1 = _detect_pass(p_static, ell, osrc, odst, pri, colors1, valid)
+    U1 = _detect_pass(ctx, ell, osrc, odst, pri, colors1, valid)
 
     def cond(s):
         return s[1].any() & (s[3] < max_rounds)
@@ -435,9 +435,9 @@ def _cat_loop(ell, osrc, odst, pri, p_static, max_rounds):
         trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(n_def)
         # phase A: re-color the defect set                      (pass 1)
         colors2, _, _, ovf2 = _chunked_pass(
-            p_static, ell, osrc, odst, pri, colors, U, zeros, detect=False)
+            ctx, ell, osrc, odst, pri, colors, U, zeros, detect=False)
         # phase B: separate detect pass                         (pass 2)
-        U2 = _detect_pass(p_static, ell, osrc, odst, pri, colors2, U)
+        U2 = _detect_pass(ctx, ell, osrc, odst, pri, colors2, U)
         return colors2, U2, trace, r + 1, tot + n_def, ovf | ovf2
 
     trace = jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32)
@@ -446,15 +446,15 @@ def _cat_loop(ell, osrc, odst, pri, p_static, max_rounds):
     return colors[:n], r, trace, tot, ovf
 
 
-@functools.partial(jax.jit, static_argnames=("p_static",))
-def _gm_round0(ell, osrc, odst, pri, p_static):
-    n, n_pad, C, n_chunks, impl = p_static
+@functools.partial(jax.jit, static_argnames=("ctx",))
+def _gm_round0(ell, osrc, odst, pri, ctx):
+    n, n_pad, C, n_chunks, impl = ctx.unpack()
     colors0 = jnp.full((n_pad,), -1, jnp.int32)
     valid = jnp.arange(n_pad) < n
     zeros = jnp.zeros((n_pad,), bool)
     colors1, _, _, ovf = _chunked_pass(
-        p_static, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
-    defect = _detect_pass(p_static, ell, osrc, odst, pri, colors1, valid)
+        ctx, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
+    defect = _detect_pass(ctx, ell, osrc, odst, pri, colors1, valid)
     return colors1, defect, ovf
 
 
@@ -507,21 +507,27 @@ def _prob_runner(loop, prob: ColoringProblem, n_chunks: int, max_rounds: int,
                  impl: str):
     """Adapt the standard from-scratch loop signature to ``_run_with_retry``."""
     def run(C):
-        p_static = (prob.n, prob.n_pad, C, n_chunks, impl)
+        ctx = PassContext.for_problem(prob, n_chunks=n_chunks, C=C,
+                                      forbidden_impl=impl)
         return loop(prob.ell, prob.ovf_src, prob.ovf_dst, prob.pri,
-                    p_static, max_rounds)
+                    ctx, max_rounds)
     return run
 
 
-def color_rsoc(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
-               n_chunks: int = 16, max_rounds: int = 1000,
-               ell_cap: int = 512, relabel: bool = True,
-               forbidden_impl: Optional[str] = None) -> ColoringResult:
+# --------------------------------------------------------------------------
+# registered engines (the implementations behind repro.api.color)
+# --------------------------------------------------------------------------
+
+@registry.register_engine("rsoc", distance=1, mode="static",
+                          replaces="color_rsoc")
+def _rsoc_engine(g: CSRGraph, spec) -> ColoringResult:
     """RSOC (paper Alg. 3): fused detect-and-recolor, one pass per round."""
-    impl = _resolve_impl(forbidden_impl)
-    prob = prepare(g, seed, n_chunks, ell_cap, C, relabel)
+    impl = resolve_impl(spec.forbidden_impl)
+    prob = prepare(g, spec.seed, spec.n_chunks, spec.ell_cap, spec.C,
+                   spec.relabel)
     (colors, r, trace, tot, _), final_C, retries = _run_with_retry(
-        _prob_runner(_rsoc_loop, prob, n_chunks, max_rounds, impl), prob.C)
+        _prob_runner(_rsoc_loop, prob, spec.n_chunks, spec.max_rounds, impl),
+        prob.C)
     colors = _unpermute(colors, prob.perm, prob.n)
     return ColoringResult(colors=colors, n_rounds=int(r),
                           conflicts_per_round=np.asarray(trace),
@@ -532,15 +538,16 @@ def color_rsoc(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
                           final_C=final_C, retries=retries)
 
 
-def color_cat(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
-              n_chunks: int = 16, max_rounds: int = 1000,
-              ell_cap: int = 512, relabel: bool = True,
-              forbidden_impl: Optional[str] = None) -> ColoringResult:
+@registry.register_engine("cat", distance=1, mode="static",
+                          replaces="color_cat")
+def _cat_engine(g: CSRGraph, spec) -> ColoringResult:
     """Catalyurek et al. (paper Alg. 2): two-phase rounds."""
-    impl = _resolve_impl(forbidden_impl)
-    prob = prepare(g, seed, n_chunks, ell_cap, C, relabel)
+    impl = resolve_impl(spec.forbidden_impl)
+    prob = prepare(g, spec.seed, spec.n_chunks, spec.ell_cap, spec.C,
+                   spec.relabel)
     (colors, r, trace, tot, _), final_C, retries = _run_with_retry(
-        _prob_runner(_cat_loop, prob, n_chunks, max_rounds, impl), prob.C)
+        _prob_runner(_cat_loop, prob, spec.n_chunks, spec.max_rounds, impl),
+        prob.C)
     colors = _unpermute(colors, prob.perm, prob.n)
     return ColoringResult(colors=colors, n_rounds=int(r),
                           conflicts_per_round=np.asarray(trace),
@@ -551,16 +558,18 @@ def color_cat(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
                           final_C=final_C, retries=retries)
 
 
-def color_gm(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
-             n_chunks: int = 16, ell_cap: int = 512,
-             relabel: bool = True,
-             forbidden_impl: Optional[str] = None) -> ColoringResult:
-    """Gebremedhin-Manne: speculate, detect, serial repair."""
-    impl = _resolve_impl(forbidden_impl)
-    prob = prepare(g, seed, n_chunks, ell_cap, C, relabel)
-    p_static = (prob.n, prob.n_pad, prob.C, n_chunks, impl)
+@registry.register_engine("gm", distance=1, mode="static",
+                          replaces="color_gm")
+def _gm_engine(g: CSRGraph, spec) -> ColoringResult:
+    """Gebremedhin-Manne: speculate, detect, serial repair (one round —
+    ``spec.max_rounds`` is inert for this engine)."""
+    impl = resolve_impl(spec.forbidden_impl)
+    prob = prepare(g, spec.seed, spec.n_chunks, spec.ell_cap, spec.C,
+                   spec.relabel)
+    ctx = PassContext.for_problem(prob, n_chunks=spec.n_chunks,
+                                  forbidden_impl=impl)
     colors, defect, ovf = _gm_round0(prob.ell, prob.ovf_src, prob.ovf_dst,
-                                     prob.pri, p_static)
+                                     prob.pri, ctx)
     colors_np = np.asarray(colors[:prob.n]).copy()
     defect_np = np.asarray(defect[:prob.n])
     # serial repair in the *relabeled* space: rebuild neighbor lists from ELL
@@ -593,19 +602,31 @@ def color_gm(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
                           gather_passes=2, final_C=prob.C, retries=0)
 
 
-def color_jp(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
-             max_rounds: int = 10000,
-             forbidden_impl: Optional[str] = None) -> ColoringResult:
-    """Jones-Plassmann priority-MIS baseline (COO formulation)."""
-    impl = _resolve_impl(forbidden_impl)
+@registry.register_engine("jp", distance=1, mode="static",
+                          replaces="color_jp")
+def _jp_engine(g: CSRGraph, spec) -> ColoringResult:
+    """Jones-Plassmann priority-MIS baseline (COO formulation; the ELL/chunk
+    fields of the spec — n_chunks, ell_cap, relabel — are inert here)."""
+    impl = resolve_impl(spec.forbidden_impl)
     n = g.n_vertices
     e = to_edge_list(g)
     src, dst = jnp.asarray(e[:, 0], jnp.int32), jnp.asarray(e[:, 1], jnp.int32)
-    pri = jnp.asarray(np.random.default_rng(seed).permutation(n).astype(np.int32))
+    pri = jnp.asarray(np.random.default_rng(spec.seed).permutation(n)
+                      .astype(np.int32))
     (colors, r, _), Cv, retries = _run_with_retry(
-        lambda Cv: _jp_loop(src, dst, pri, n, Cv, max_rounds, impl),
-        _pick_C(g, C))
+        lambda Cv: _jp_loop(src, dst, pri, n, Cv, spec.max_rounds, impl),
+        _pick_C(g, spec.C))
     colors = np.asarray(colors)
+    if (colors < 0).any():
+        # never silent: a JP round bound that is too small used to return a
+        # partial coloring with -1 entries (the legacy color_jp default was
+        # max_rounds=10000 vs the spec's 1000, so the spec path hits it
+        # earlier on adversarial priority chains)
+        raise RuntimeError(
+            f"JP left {int((colors < 0).sum())} vertices uncolored after "
+            f"max_rounds={spec.max_rounds}; raise ColoringSpec.max_rounds "
+            f"(JP needs one round per step of its longest decreasing "
+            f"priority path)")
     return ColoringResult(colors=colors, n_rounds=int(r),
                           conflicts_per_round=np.zeros(1),
                           total_conflicts=0,
@@ -615,5 +636,85 @@ def color_jp(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
                           final_C=Cv, retries=retries)
 
 
-ALGORITHMS = {"gm": color_gm, "cat": color_cat, "rsoc": color_rsoc,
-              "jp": color_jp}
+# --------------------------------------------------------------------------
+# legacy entry points: thin deprecation shims over repro.api.color
+# --------------------------------------------------------------------------
+
+def color_rsoc(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
+               n_chunks: int = 16, max_rounds: int = 1000,
+               ell_cap: int = 512, relabel: bool = True,
+               forbidden_impl: Optional[str] = None) -> ColoringResult:
+    """Deprecated: use ``repro.api.color(g, algorithm="rsoc", ...)``."""
+    return registry.legacy_entry(
+        "color_rsoc", "algorithm='rsoc'", g, algorithm="rsoc", seed=seed,
+        C=C, n_chunks=n_chunks, max_rounds=max_rounds, ell_cap=ell_cap,
+        relabel=relabel, forbidden_impl=forbidden_impl)
+
+
+def color_cat(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
+              n_chunks: int = 16, max_rounds: int = 1000,
+              ell_cap: int = 512, relabel: bool = True,
+              forbidden_impl: Optional[str] = None) -> ColoringResult:
+    """Deprecated: use ``repro.api.color(g, algorithm="cat", ...)``."""
+    return registry.legacy_entry(
+        "color_cat", "algorithm='cat'", g, algorithm="cat", seed=seed,
+        C=C, n_chunks=n_chunks, max_rounds=max_rounds, ell_cap=ell_cap,
+        relabel=relabel, forbidden_impl=forbidden_impl)
+
+
+def color_gm(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
+             n_chunks: int = 16, ell_cap: int = 512,
+             relabel: bool = True,
+             forbidden_impl: Optional[str] = None) -> ColoringResult:
+    """Deprecated: use ``repro.api.color(g, algorithm="gm", ...)``."""
+    return registry.legacy_entry(
+        "color_gm", "algorithm='gm'", g, algorithm="gm", seed=seed,
+        C=C, n_chunks=n_chunks, ell_cap=ell_cap, relabel=relabel,
+        forbidden_impl=forbidden_impl)
+
+
+def color_jp(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
+             max_rounds: int = 10000,
+             forbidden_impl: Optional[str] = None) -> ColoringResult:
+    """Deprecated: use ``repro.api.color(g, algorithm="jp", ...)``."""
+    return registry.legacy_entry(
+        "color_jp", "algorithm='jp'", g, algorithm="jp", seed=seed, C=C,
+        max_rounds=max_rounds, forbidden_impl=forbidden_impl)
+
+
+class _AlgorithmsView(Mapping):
+    """``ALGORITHMS`` as a live registry view (DESIGN.md §11).
+
+    Keys are the algorithm names registered for the classic combo
+    (distance=1, mode="static", backend="local"); values are callables
+    ``fn(g, **spec_overrides) -> ColoringResult`` that route through
+    ``repro.api.color`` — the supported bulk interface, so unlike the
+    ``color_*`` shims it does not emit deprecation warnings.
+    """
+
+    def _names(self) -> list[str]:
+        from repro import api
+        return api.algorithms()   # the (1, "static", "local") slice
+
+    def __getitem__(self, name: str):
+        if name not in self._names():
+            raise KeyError(name)
+
+        def run(g, **overrides):
+            from repro import api
+            return api.color(g, algorithm=name, **overrides)
+
+        run.__name__ = f"color_via_registry[{name}]"
+        return run
+
+    def __iter__(self):
+        return iter(self._names())
+
+    def __len__(self) -> int:
+        return len(self._names())
+
+    def __repr__(self) -> str:
+        return f"ALGORITHMS({', '.join(self._names())})"
+
+
+ALGORITHMS = _AlgorithmsView()

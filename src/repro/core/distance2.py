@@ -45,9 +45,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import registry
 from repro.graphs.csr import CSRGraph, power_graph, to_edge_list
 from repro.core import coloring as col
 from repro.core import frontier as fr
+from repro.core.context import PassContext
 
 
 # --------------------------------------------------------------------------
@@ -129,7 +131,7 @@ def _twohop_gather(ell, colors, pri, row_ids, n_pad):
             jnp.concatenate([np1, np2], axis=1))
 
 
-def _d2_chunked_pass(p_static, ell, pri, rows_mask, colors, U, force, *,
+def _d2_chunked_pass(ctx, ell, pri, rows_mask, colors, U, force, *,
                      detect: bool):
     """One sequential two-hop sweep over n_chunks chunks.
 
@@ -140,7 +142,7 @@ def _d2_chunked_pass(p_static, ell, pri, rows_mask, colors, U, force, *,
     distance-2, the left-side mask for bipartite partial coloring.
     Returns (colors, recolored_mask, n_defects, overflowed).
     """
-    n, n_pad, C, n_chunks, impl = p_static
+    n, n_pad, C, n_chunks, impl = ctx.unpack()
     cs = n_pad // n_chunks
 
     def chunk_body(k, carry):
@@ -171,11 +173,11 @@ def _d2_chunked_pass(p_static, ell, pri, rows_mask, colors, U, force, *,
     return jax.lax.fori_loop(0, n_chunks, chunk_body, init)
 
 
-def _d2_compact_pass(p_static, ell, pri, colors, idx, idx_valid):
+def _d2_compact_pass(ctx, ell, pri, colors, idx, idx_valid):
     """Two-hop fused pass over a compacted frontier-index buffer (the
     distance-2 mirror of ``frontier._compact_pass``): gathers only the
     ≤ cap frontier rows, so repair rounds pay cap·W² instead of n·W²."""
-    n, n_pad_s, C, n_chunks, impl = p_static
+    n, n_pad_s, C, n_chunks, impl = ctx.unpack()
     cap = idx.shape[0]
     cs = cap // n_chunks
     n_pad = colors.shape[0]
@@ -204,27 +206,27 @@ def _d2_compact_pass(p_static, ell, pri, colors, idx, idx_valid):
     return jax.lax.fori_loop(0, n_chunks, chunk_body, init)
 
 
-@functools.partial(jax.jit, static_argnames=("p_static", "cap", "max_rounds"))
-def _d2_loop(ell, pri, rows_mask, p_static, cap, max_rounds):
+@functools.partial(jax.jit, static_argnames=("ctx", "cap", "max_rounds"))
+def _d2_loop(ell, pri, rows_mask, ctx, cap, max_rounds):
     """Round 0 (tentative two-hop coloring of every masked row) followed by
     the frontier-compacted fused repair, with two-hop passes plugged into
     ``frontier._compact_repair``."""
-    n, n_pad, C, n_chunks, impl = p_static
+    n, n_pad, C, n_chunks, impl = ctx.unpack()
     colors0 = jnp.full((n_pad,), -1, jnp.int32)
     zeros = jnp.zeros((n_pad,), bool)
     colors1, U, _, ovf0 = _d2_chunked_pass(
-        p_static, ell, pri, rows_mask, colors0, zeros, rows_mask,
+        ctx, ell, pri, rows_mask, colors0, zeros, rows_mask,
         detect=False)
 
     def pass_small(colors, idx, idx_valid):
-        return _d2_compact_pass(p_static, ell, pri, colors, idx, idx_valid)
+        return _d2_compact_pass(ctx, ell, pri, colors, idx, idx_valid)
 
     def pass_big(colors, U, force):
-        return _d2_chunked_pass(p_static, ell, pri, rows_mask, colors, U,
+        return _d2_chunked_pass(ctx, ell, pri, rows_mask, colors, U,
                                 force, detect=True)
 
     colors, r, trace, tot, ovf = fr._compact_repair(
-        p_static, cap, pass_small, pass_big, colors1, U, max_rounds, ovf0)
+        ctx, cap, pass_small, pass_big, colors1, U, max_rounds, ovf0)
     return colors, r, trace, tot, ovf
 
 
@@ -260,8 +262,9 @@ def _prepare_native(g: CSRGraph, seed: int, n_chunks: int, C: Optional[int],
 def _run_d2_with_retry(prob: col.ColoringProblem, rows_mask, n_chunks: int,
                        cap: int, max_rounds: int, impl: str):
     def run(C):
-        p_static = (prob.n, prob.n_pad, C, n_chunks, impl)
-        return _d2_loop(prob.ell, prob.pri, rows_mask, p_static, cap,
+        ctx = PassContext.for_problem(prob, n_chunks=n_chunks, C=C,
+                                      forbidden_impl=impl)
+        return _d2_loop(prob.ell, prob.pri, rows_mask, ctx, cap,
                         max_rounds)
     return col._run_with_retry(run, prob.C)
 
@@ -275,21 +278,60 @@ def _d2_result(colors, r, trace, tot, final_C, retries) -> col.ColoringResult:
         distance=2)
 
 
+@registry.register_engine("rsoc", distance=2, mode="static",
+                          replaces="color_distance2")
+def _distance2_engine(g: CSRGraph, spec) -> col.ColoringResult:
+    """Native distance-2 RSOC: fused two-hop gather, G² never materialized."""
+    impl = col._resolve_impl(spec.forbidden_impl)
+    prob = _prepare_native(g, spec.seed, spec.n_chunks, spec.C, spec.relabel,
+                           spec.ell_cap)
+    cap = fr.frontier_cap(prob.n_pad, spec.n_chunks, spec.frontier_frac)
+    rows_mask = jnp.arange(prob.n_pad) < prob.n
+    (colors, r, trace, tot, _), final_C, retries = _run_d2_with_retry(
+        prob, rows_mask, spec.n_chunks, cap, spec.max_rounds, impl)
+    colors = col._unpermute(colors, prob.perm, prob.n)
+    return _d2_result(colors, r, trace, tot, final_C, retries)
+
+
+@registry.register_engine("rsoc", distance=2, mode="partial",
+                          replaces="color_bipartite_partial")
+def _bipartite_partial_engine(g: CSRGraph, spec) -> col.ColoringResult:
+    """One-sided distance-2 coloring of a bipartite graph (Jacobian
+    compression): color only the left side [0, spec.n_left) so that any two
+    left vertices sharing a neighbor get distinct colors.
+
+    Same two-hop engine restricted to the left-side row mask; right-side
+    vertices stay uncolored, so their (hop-1) contributions are inert and
+    only shared-neighbor (hop-2) colors constrain.  Returns a result whose
+    ``colors`` has length ``spec.n_left``.
+    """
+    n_left = spec.n_left
+    if n_left is None or not 0 < n_left <= g.n_vertices:
+        raise ValueError(f"n_left {n_left} out of range for n={g.n_vertices}")
+    impl = col._resolve_impl(spec.forbidden_impl)
+    prob = _prepare_native(g, spec.seed, spec.n_chunks, spec.C, spec.relabel,
+                           spec.ell_cap)
+    cap = fr.frontier_cap(prob.n_pad, spec.n_chunks, spec.frontier_frac)
+    mask_np = np.zeros(prob.n_pad, dtype=bool)
+    mask_np[prob.perm[:n_left]] = True        # left side, relabeled space
+    (colors, r, trace, tot, _), final_C, retries = _run_d2_with_retry(
+        prob, jnp.asarray(mask_np), spec.n_chunks, cap, spec.max_rounds, impl)
+    colors = col._unpermute(colors, prob.perm, prob.n)[:n_left]
+    return _d2_result(colors, r, trace, tot, final_C, retries)
+
+
 def color_distance2(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
                     n_chunks: int = 16, max_rounds: int = 1000,
                     ell_cap: int = 512, relabel: bool = True,
                     frontier_frac: float = 0.125,
                     forbidden_impl: Optional[str] = None
                     ) -> col.ColoringResult:
-    """Native distance-2 RSOC: fused two-hop gather, G² never materialized."""
-    impl = col._resolve_impl(forbidden_impl)
-    prob = _prepare_native(g, seed, n_chunks, C, relabel, ell_cap)
-    cap = fr.frontier_cap(prob.n_pad, n_chunks, frontier_frac)
-    rows_mask = jnp.arange(prob.n_pad) < prob.n
-    (colors, r, trace, tot, _), final_C, retries = _run_d2_with_retry(
-        prob, rows_mask, n_chunks, cap, max_rounds, impl)
-    colors = col._unpermute(colors, prob.perm, prob.n)
-    return _d2_result(colors, r, trace, tot, final_C, retries)
+    """Deprecated: use ``repro.api.color(g, distance=2)``."""
+    return registry.legacy_entry(
+        "color_distance2", "distance=2", g, algorithm="rsoc", distance=2,
+        seed=seed, C=C, n_chunks=n_chunks, max_rounds=max_rounds,
+        ell_cap=ell_cap, relabel=relabel, frontier_frac=frontier_frac,
+        forbidden_impl=forbidden_impl)
 
 
 def color_bipartite_partial(g: CSRGraph, n_left: int, seed: int = 0,
@@ -299,23 +341,11 @@ def color_bipartite_partial(g: CSRGraph, n_left: int, seed: int = 0,
                             frontier_frac: float = 0.125,
                             forbidden_impl: Optional[str] = None
                             ) -> col.ColoringResult:
-    """One-sided distance-2 coloring of a bipartite graph (Jacobian
-    compression): color only the left side [0, n_left) so that any two left
-    vertices sharing a neighbor get distinct colors.
-
-    Same two-hop engine restricted to the left-side row mask; right-side
-    vertices stay uncolored, so their (hop-1) contributions are inert and
-    only shared-neighbor (hop-2) colors constrain.  Returns a result whose
-    ``colors`` has length ``n_left``.
-    """
-    if not 0 < n_left <= g.n_vertices:
-        raise ValueError(f"n_left {n_left} out of range for n={g.n_vertices}")
-    impl = col._resolve_impl(forbidden_impl)
-    prob = _prepare_native(g, seed, n_chunks, C, relabel, ell_cap)
-    cap = fr.frontier_cap(prob.n_pad, n_chunks, frontier_frac)
-    mask_np = np.zeros(prob.n_pad, dtype=bool)
-    mask_np[prob.perm[:n_left]] = True        # left side, relabeled space
-    (colors, r, trace, tot, _), final_C, retries = _run_d2_with_retry(
-        prob, jnp.asarray(mask_np), n_chunks, cap, max_rounds, impl)
-    colors = col._unpermute(colors, prob.perm, prob.n)[:n_left]
-    return _d2_result(colors, r, trace, tot, final_C, retries)
+    """Deprecated: use ``repro.api.color(g, distance=2, mode="partial",
+    n_left=...)``."""
+    return registry.legacy_entry(
+        "color_bipartite_partial", "distance=2, mode='partial', n_left=...",
+        g, algorithm="rsoc", distance=2, mode="partial", n_left=n_left,
+        seed=seed, C=C, n_chunks=n_chunks, max_rounds=max_rounds,
+        ell_cap=ell_cap, relabel=relabel, frontier_frac=frontier_frac,
+        forbidden_impl=forbidden_impl)

@@ -34,8 +34,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import registry
 from repro.graphs.csr import CSRGraph, FILL, to_ell
 from repro.core import coloring as col
+from repro.core.context import PassContext
 from repro.core.partition import Partition, HaloPlan, block_partition, build_halo
 
 MAX_ROUNDS_TRACE = col.MAX_ROUNDS_TRACE
@@ -46,15 +48,18 @@ MAX_ROUNDS_TRACE = col.MAX_ROUNDS_TRACE
 # --------------------------------------------------------------------------
 
 def _local_fused_pass(ell_loc, colors_glb, pri_glb, U_loc, force_loc,
-                      row_base, n, C, n_chunks, *, detect: bool,
-                      impl: str = col.DEFAULT_FORBIDDEN_IMPL):
+                      row_base, ctx: PassContext, *, detect: bool):
     """Chunked detect-and-recolor of this shard's rows against global colors.
 
     ell_loc:   (n_loc, W) global neighbor ids
     colors_glb:(n_glb,)   replicated (or local+ghost) color table
     row_base:  first global row of this shard
+    ctx:       ``ctx.n`` bounds the valid global rows; ``ctx.n_pad`` is the
+               table the caller sliced this shard from (unused here — the
+               chunking runs over ell_loc's own rows)
     Returns (new local colors (n_loc,), recolored mask, n_defects).
     """
+    n, _, C, n_chunks, impl = ctx.unpack()
     n_loc = ell_loc.shape[0]
     cs = n_loc // n_chunks
     colors_loc = jax.lax.dynamic_slice_in_dim(colors_glb, row_base, n_loc, 0)
@@ -97,12 +102,15 @@ def _local_fused_pass(ell_loc, colors_glb, pri_glb, U_loc, force_loc,
 # replicated-exchange engines
 # --------------------------------------------------------------------------
 
-def build_rsoc_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
-                           C: int, n_chunks: int, max_rounds: int = 64,
-                           forbidden_impl: Optional[str] = None):
+def build_rsoc_distributed(mesh: Mesh, axis: str, ctx: PassContext,
+                           max_rounds: int = 64):
     """Returns a jittable fn(ell (n_pad, W), pri (n_pad,)) -> (colors, rounds,
-    conflicts). ONE fused collective per round (colors slice + defect count)."""
-    impl = col._resolve_impl(forbidden_impl)
+    conflicts). ONE fused collective per round (colors slice + defect count).
+
+    ``ctx`` carries (n, n_pad, C, n_chunks, forbidden_impl) for the whole
+    (unsharded) problem; each shard owns n_pad / D rows.
+    """
+    n_pad = ctx.n_pad
     D = int(np.prod([mesh.shape[a] for a in axis.split(",")]))
     axes = tuple(axis.split(","))
     n_loc = n_pad // D
@@ -126,7 +134,7 @@ def build_rsoc_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
 
         # round 0: color everything; 1 collective
         c_l, _, _ = _local_fused_pass(ell_loc, colors0, pri, zeros, ones,
-                                      row_base, n, C, n_chunks, detect=False, impl=impl)
+                                      row_base, ctx, detect=False)
         colors, _ = exchange(c_l, jnp.int32(0))
         U0 = ones
 
@@ -138,7 +146,7 @@ def build_rsoc_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
             colors, U, trace, r, tot, _ = s
             c_l, recolored, n_def_l = _local_fused_pass(
                 ell_loc, colors, pri, U, jnp.zeros((n_loc,), bool),
-                row_base, n, C, n_chunks, detect=True, impl=impl)
+                row_base, ctx, detect=True)
             colors2, n_def = exchange(c_l, n_def_l)      # ONE collective
             trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(
                 n_def.astype(jnp.int32))
@@ -156,11 +164,10 @@ def build_rsoc_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
     return jax.jit(f)
 
 
-def build_cat_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
-                          C: int, n_chunks: int, max_rounds: int = 64,
-                          forbidden_impl: Optional[str] = None):
+def build_cat_distributed(mesh: Mesh, axis: str, ctx: PassContext,
+                          max_rounds: int = 64):
     """CAT with the structural 2-collectives-per-round schedule."""
-    impl = col._resolve_impl(forbidden_impl)
+    n_pad = ctx.n_pad
     axes = tuple(axis.split(","))
     D = int(np.prod([mesh.shape[a] for a in axes]))
     n_loc = n_pad // D
@@ -186,7 +193,7 @@ def build_cat_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
 
         # round 0
         c_l, _, _ = _local_fused_pass(ell_loc, colors0, pri, zeros, ones,
-                                      row_base, n, C, n_chunks, detect=False, impl=impl)
+                                      row_base, ctx, detect=False)
         colors = gather_colors(c_l)                       # collective 1
         U = detect_local(colors)
         n_def = jax.lax.psum(U.sum(dtype=jnp.int32), axname)  # collective 2
@@ -199,8 +206,7 @@ def build_cat_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
             trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(n_def)
             # phase A: recolor defect set
             c_l, _, _ = _local_fused_pass(ell_loc, colors, pri, U, zeros,
-                                          row_base, n, C, n_chunks,
-                                          detect=False, impl=impl)
+                                          row_base, ctx, detect=False)
             colors2 = gather_colors(c_l)                  # collective 1
             # phase B: detect + global consensus
             U2 = detect_local(colors2) & U
@@ -222,20 +228,22 @@ def build_cat_distributed(mesh: Mesh, axis: str, n: int, n_pad: int, W: int,
 # halo-exchange RSOC (collective-term optimized; EXPERIMENTS.md §Perf)
 # --------------------------------------------------------------------------
 
-def build_rsoc_halo(mesh: Mesh, axis: str, plan_shapes: dict, n: int, C: int,
-                    n_chunks: int, max_rounds: int = 64,
-                    forbidden_impl: Optional[str] = None):
+def build_rsoc_halo(mesh: Mesh, axis: str, plan_shapes: dict,
+                    ctx: PassContext, max_rounds: int = 64):
     """RSOC exchanging only boundary colors.
 
     Inputs per shard (leading dim D, sharded): ell_local (n_loc, W) with
     local/ghost slot ids; boundary (max_b,); ghost flat index (max_g,) into the
     gathered (D*max_b,) boundary payload.  Color table per shard has
-    n_loc + max_g slots (ghosts at the tail).
+    n_loc + max_g slots (ghosts at the tail).  ``ctx`` supplies
+    (C, n_chunks, forbidden_impl); its row counts are re-derived per shard.
     """
-    impl = col._resolve_impl(forbidden_impl)
     axes = tuple(axis.split(","))
     D, n_loc = plan_shapes["D"], plan_shapes["n_loc"]
     max_b, max_g = plan_shapes["max_b"], plan_shapes["max_g"]
+    # every local row is a valid candidate; the shard's color table carries
+    # max_g ghost slots at the tail
+    lctx = dataclasses.replace(ctx, n=n_loc, n_pad=n_loc + max_g)
 
     def body(ell_loc, pri_loc, pri_ghost, boundary, ghost_flat, valid_loc):
         axname = axes if len(axes) > 1 else axes[0]
@@ -259,8 +267,7 @@ def build_rsoc_halo(mesh: Mesh, axis: str, plan_shapes: dict, n: int, C: int,
 
         def fused(colors_tab, U, force, detect):
             return _local_fused_pass(ell_loc, colors_tab, pri_tab, U, force,
-                                     0, n_loc, C, n_chunks, detect=detect,
-                                     impl=impl)
+                                     0, lctx, detect=detect)
 
         # round 0
         c_l, _, _ = fused(colors_tab0, zeros, valid_loc, False)
@@ -298,10 +305,11 @@ def build_rsoc_halo(mesh: Mesh, axis: str, plan_shapes: dict, n: int, C: int,
 # host-level drivers
 # --------------------------------------------------------------------------
 
-def color_distributed(g: CSRGraph, mesh: Mesh, axis: str = "data",
-                      algorithm: str = "rsoc", seed: int = 0,
-                      n_chunks: int = 4, C: Optional[int] = None,
-                      max_rounds: int = 64):
+def _color_distributed(g: CSRGraph, mesh: Mesh, axis: str = "data",
+                       algorithm: str = "rsoc", seed: int = 0,
+                       n_chunks: int = 4, C: Optional[int] = None,
+                       max_rounds: int = 64,
+                       forbidden_impl: Optional[str] = None):
     """Run distributed coloring on real devices (tests use host platforms)."""
     axes = tuple(axis.split(","))
     D = int(np.prod([mesh.shape[a] for a in axes]))
@@ -315,9 +323,11 @@ def color_distributed(g: CSRGraph, mesh: Mesh, axis: str = "data",
     rng = np.random.default_rng(seed + 1)
     pri = np.full(n_pad, -1, np.int32)
     pri[:part.n] = rng.permutation(part.n).astype(np.int32)
-    C = C or col._pick_C(gg, None)
+    ctx = PassContext(n=part.n, n_pad=n_pad,
+                      C=C or col._pick_C(gg, None), n_chunks=n_chunks,
+                      forbidden_impl=col._resolve_impl(forbidden_impl))
     build = {"rsoc": build_rsoc_distributed, "cat": build_cat_distributed}[algorithm]
-    fn = build(mesh, axis, part.n, n_pad, W, C, n_chunks, max_rounds)
+    fn = build(mesh, axis, ctx, max_rounds)
     ell_sharding = NamedSharding(mesh, P(*((axes if len(axes) > 1 else (axes[0],)) + (None,))))
     ellj = jax.device_put(jnp.asarray(ell), ell_sharding)
     prij = jax.device_put(jnp.asarray(pri), NamedSharding(mesh, P()))
@@ -328,4 +338,42 @@ def color_distributed(g: CSRGraph, mesh: Mesh, axis: str = "data",
         colors=colors, n_rounds=int(r), conflicts_per_round=np.asarray(trace),
         total_conflicts=int(tot), n_colors=col.n_colors_used(colors),
         overflow=False,
-        gather_passes=(1 + int(r)) * (1 if algorithm == "rsoc" else 2))
+        gather_passes=(1 + int(r)) * (1 if algorithm == "rsoc" else 2),
+        final_C=ctx.C, retries=0, distance=1)
+
+
+def _distributed_engine(algorithm: str):
+    def engine(g: CSRGraph, spec, *, mesh: Optional[Mesh] = None,
+               axis: str = "data") -> col.ColoringResult:
+        if mesh is None:
+            raise ValueError(
+                "backend='distributed' requires a device mesh: "
+                "repro.api.color(g, spec, mesh=<jax.sharding.Mesh>)")
+        return _color_distributed(
+            g, mesh, axis=axis, algorithm=algorithm, seed=spec.seed,
+            n_chunks=spec.n_chunks, C=spec.C, max_rounds=spec.max_rounds,
+            forbidden_impl=spec.forbidden_impl)
+    engine.__name__ = f"_{algorithm}_distributed_engine"
+    return engine
+
+
+registry.register_engine("rsoc", distance=1, mode="static",
+                         backend="distributed",
+                         replaces="color_distributed")(
+    _distributed_engine("rsoc"))
+registry.register_engine("cat", distance=1, mode="static",
+                         backend="distributed",
+                         replaces="color_distributed")(
+    _distributed_engine("cat"))
+
+
+def color_distributed(g: CSRGraph, mesh: Mesh, axis: str = "data",
+                      algorithm: str = "rsoc", seed: int = 0,
+                      n_chunks: int = 4, C: Optional[int] = None,
+                      max_rounds: int = 64):
+    """Deprecated: use ``repro.api.color(g, backend="distributed",
+    mesh=...)``."""
+    return registry.legacy_entry(
+        "color_distributed", "backend='distributed', mesh=...", g,
+        algorithm=algorithm, backend="distributed", mesh=mesh, axis=axis,
+        seed=seed, n_chunks=n_chunks, C=C, max_rounds=max_rounds)

@@ -32,14 +32,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import registry
 from repro.graphs.csr import CSRGraph
 from repro.core import bitset
 from repro.core import coloring as col
+from repro.core.context import PassContext
 
 MAX_ROUNDS_TRACE = col.MAX_ROUNDS_TRACE
 
 
-def _compact_pass(p_static, ell, osrc, odst, pri, colors, idx, idx_valid):
+def _compact_pass(ctx, ell, osrc, odst, pri, colors, idx, idx_valid):
     """Fused detect-and-recolor over a compacted row-index buffer.
 
     ``idx`` holds the (≤ cap) row ids of the current frontier, dead slots
@@ -47,7 +49,7 @@ def _compact_pass(p_static, ell, osrc, odst, pri, colors, idx, idx_valid):
     it is defective *right now* — or still uncolored (incremental seeds).
     Returns (colors, recolored_mask, n_defects, cap_overflowed).
     """
-    n, n_pad_s, C, n_chunks, impl = p_static
+    n, n_pad_s, C, n_chunks, impl = ctx.unpack()
     cap = idx.shape[0]
     cs = cap // n_chunks
     n_pad = colors.shape[0]
@@ -111,20 +113,20 @@ def _compact_pass(p_static, ell, osrc, odst, pri, colors, idx, idx_valid):
     return jax.lax.fori_loop(0, n_chunks, chunk_body, init)
 
 
-def _d1_passes(p_static, ell, osrc, odst, pri):
+def _d1_passes(ctx, ell, osrc, odst, pri):
     """The distance-1 (pass_small, pass_big) pair for ``_compact_repair``."""
     def pass_small(colors, idx, idx_valid):
-        return _compact_pass(p_static, ell, osrc, odst, pri, colors,
+        return _compact_pass(ctx, ell, osrc, odst, pri, colors,
                              idx, idx_valid)
 
     def pass_big(colors, U, force):
-        return col._chunked_pass(p_static, ell, osrc, odst, pri, colors,
+        return col._chunked_pass(ctx, ell, osrc, odst, pri, colors,
                                  U, force, detect=True)
 
     return pass_small, pass_big
 
 
-def _compact_repair(p_static, cap, pass_small, pass_big, colors, U,
+def _compact_repair(ctx, cap, pass_small, pass_big, colors, U,
                     max_rounds, ovf0=False):
     """Frontier-compacted fused repair from an arbitrary (colors, U) start.
 
@@ -139,7 +141,7 @@ def _compact_repair(p_static, cap, pass_small, pass_big, colors, U,
     ``pass_big(colors, U, force)`` is the full-width fallback; both return
     (colors, recolored_mask, n_defects, cap_overflowed).
     """
-    n, n_pad, C, n_chunks, impl = p_static
+    n, n_pad, C, n_chunks, impl = ctx.unpack()
 
     def compact(U):
         idx = jnp.nonzero(U, size=cap, fill_value=n_pad)[0].astype(jnp.int32)
@@ -176,47 +178,46 @@ def _compact_repair(p_static, cap, pass_small, pass_big, colors, U,
     return colors, r, trace, tot, ovf
 
 
-@functools.partial(jax.jit, static_argnames=("p_static", "cap", "max_rounds"))
-def _rsoc_compact_loop(ell, osrc, odst, pri, p_static, cap, max_rounds):
-    n, n_pad, C, n_chunks, impl = p_static
+@functools.partial(jax.jit, static_argnames=("ctx", "cap", "max_rounds"))
+def _rsoc_compact_loop(ell, osrc, odst, pri, ctx, cap, max_rounds):
+    n, n_pad, C, n_chunks, impl = ctx.unpack()
     colors0 = jnp.full((n_pad,), -1, jnp.int32)
     valid = jnp.arange(n_pad) < n
     zeros = jnp.zeros((n_pad,), bool)
 
     # round 0: full-width chunked coloring (everyone needs a color anyway)
     colors1, U, _, ovf0 = col._chunked_pass(
-        p_static, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
-    pass_small, pass_big = _d1_passes(p_static, ell, osrc, odst, pri)
+        ctx, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
+    pass_small, pass_big = _d1_passes(ctx, ell, osrc, odst, pri)
     colors, r, trace, tot, ovf = _compact_repair(
-        p_static, cap, pass_small, pass_big, colors1, U, max_rounds, ovf0)
+        ctx, cap, pass_small, pass_big, colors1, U, max_rounds, ovf0)
     return colors[:n], r, trace, tot, ovf
 
 
-@functools.partial(jax.jit, static_argnames=("p_static", "cap", "max_rounds"))
-def _repair_compact_loop(ell, osrc, odst, pri, colors, U, p_static, cap,
+@functools.partial(jax.jit, static_argnames=("ctx", "cap", "max_rounds"))
+def _repair_compact_loop(ell, osrc, odst, pri, colors, U, ctx, cap,
                          max_rounds):
     """Externally-seeded compacted repair (no round 0): the incremental
     recoloring entry point.  Returns full-length (n_pad) colors."""
-    pass_small, pass_big = _d1_passes(p_static, ell, osrc, odst, pri)
-    return _compact_repair(p_static, cap, pass_small, pass_big, colors, U,
+    pass_small, pass_big = _d1_passes(ctx, ell, osrc, odst, pri)
+    return _compact_repair(ctx, cap, pass_small, pass_big, colors, U,
                            max_rounds)
 
 
-def color_rsoc_compact(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
-                       n_chunks: int = 16, max_rounds: int = 1000,
-                       ell_cap: int = 512, relabel: bool = True,
-                       frontier_frac: float = 0.125,
-                       forbidden_impl: Optional[str] = None
-                       ) -> col.ColoringResult:
+@registry.register_engine("rsoc_compact", distance=1, mode="static",
+                          replaces="color_rsoc_compact")
+def _rsoc_compact_engine(g: CSRGraph, spec) -> col.ColoringResult:
     """RSOC with frontier compaction after round 0."""
-    impl = col._resolve_impl(forbidden_impl)
-    prob = col.prepare(g, seed, n_chunks, ell_cap, C, relabel)
-    cap = frontier_cap(prob.n_pad, n_chunks, frontier_frac)
+    impl = col._resolve_impl(spec.forbidden_impl)
+    prob = col.prepare(g, spec.seed, spec.n_chunks, spec.ell_cap, spec.C,
+                       spec.relabel)
+    cap = frontier_cap(prob.n_pad, spec.n_chunks, spec.frontier_frac)
 
     def run(C_):
-        p_static = (prob.n, prob.n_pad, C_, n_chunks, impl)
+        ctx = PassContext.for_problem(prob, n_chunks=spec.n_chunks, C=C_,
+                                      forbidden_impl=impl)
         return _rsoc_compact_loop(prob.ell, prob.ovf_src, prob.ovf_dst,
-                                  prob.pri, p_static, cap, max_rounds)
+                                  prob.pri, ctx, cap, spec.max_rounds)
 
     (colors, r, trace, tot, _), C_, retries = col._run_with_retry(run, prob.C)
     colors = col._unpermute(colors, prob.perm, prob.n)
@@ -225,6 +226,20 @@ def color_rsoc_compact(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
         total_conflicts=int(tot), n_colors=col.n_colors_used(colors),
         overflow=retries > 0, gather_passes=1 + int(r),
         final_C=C_, retries=retries)
+
+
+def color_rsoc_compact(g: CSRGraph, seed: int = 0, C: Optional[int] = None,
+                       n_chunks: int = 16, max_rounds: int = 1000,
+                       ell_cap: int = 512, relabel: bool = True,
+                       frontier_frac: float = 0.125,
+                       forbidden_impl: Optional[str] = None
+                       ) -> col.ColoringResult:
+    """Deprecated: use ``repro.api.color(g, algorithm="rsoc_compact")``."""
+    return registry.legacy_entry(
+        "color_rsoc_compact", "algorithm='rsoc_compact'", g,
+        algorithm="rsoc_compact", seed=seed, C=C, n_chunks=n_chunks,
+        max_rounds=max_rounds, ell_cap=ell_cap, relabel=relabel,
+        frontier_frac=frontier_frac, forbidden_impl=forbidden_impl)
 
 
 def frontier_cap(n_pad: int, n_chunks: int, frac: float = 0.125) -> int:

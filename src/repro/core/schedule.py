@@ -37,8 +37,20 @@ def edge_color_by_dst(src: np.ndarray, dst: np.ndarray, n_nodes: int):
     return ranks, n_colors
 
 
-def vertex_schedule(g: CSRGraph, algorithm: str = "rsoc", seed: int = 0):
-    """Vertices grouped into independent sets (list of index arrays)."""
-    res = col.ALGORITHMS[algorithm](g, seed=seed)
+def vertex_schedule(g: CSRGraph, algorithm: str = "rsoc", seed: int = 0,
+                    *, max_rounds: int = 1000,
+                    forbidden_impl: str | None = None, spec=None):
+    """Vertices grouped into independent sets (list of index arrays).
+
+    Routes through ``repro.api.color`` — pass ``spec=`` for full control, or
+    the common knobs directly (``forbidden_impl``/``max_rounds`` used to be
+    silently dropped here).
+    """
+    from repro import api
+    if spec is None:
+        spec = api.ColoringSpec(algorithm=algorithm, seed=seed,
+                                max_rounds=max_rounds,
+                                forbidden_impl=forbidden_impl)
+    res = api.color(g, spec)
     assert col.is_proper(g, res.colors)
     return [np.nonzero(res.colors == c)[0] for c in range(res.n_colors)], res

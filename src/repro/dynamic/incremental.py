@@ -24,8 +24,10 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro import registry
 from repro.core import coloring as col
 from repro.core import frontier
+from repro.core.context import PassContext
 from repro.dynamic import delta
 from repro.graphs.csr import CSRGraph, FILL
 
@@ -159,10 +161,11 @@ def recolor_incremental(state: DynamicColoringState,
 
     # repair: frontier-compacted fused RSOC seeded from touched endpoints
     def run(C):
-        p_static = (state.n, state.n_pad, C, state.n_chunks,
-                    state.forbidden_impl)
+        ctx = PassContext(n=state.n, n_pad=state.n_pad, C=C,
+                          n_chunks=state.n_chunks,
+                          forbidden_impl=state.forbidden_impl)
         return frontier._repair_compact_loop(
-            ell, osrc, odst, state.pri, state.colors_dev, U, p_static,
+            ell, osrc, odst, state.pri, state.colors_dev, U, ctx,
             state.frontier_cap, max_rounds)
 
     (colors2, r, trace, tot, _), C, retries = col._run_with_retry(
@@ -174,3 +177,29 @@ def recolor_incremental(state: DynamicColoringState,
         last_conflicts=int(tot), last_gather_passes=passes,
         total_gather_passes=state.total_gather_passes + passes,
         retries=state.retries + retries, ovf_grows=state.ovf_grows + grows)
+
+
+# --------------------------------------------------------------------------
+# registry adapter: mode="incremental" through the repro.api front door
+# --------------------------------------------------------------------------
+
+@registry.register_engine("rsoc", distance=1, mode="incremental",
+                          replaces="dynamic_state")
+def _incremental_engine(g: CSRGraph, spec) -> col.ColoringResult:
+    """Encode ``g`` for mutation and color it from scratch once; the
+    device-resident ``DynamicColoringState`` rides the result's ``state``
+    field so callers (``ColoringService.add_graph``) can keep applying
+    ``recolor_incremental`` update batches to it."""
+    st = dynamic_state(
+        g, seed=spec.seed, n_chunks=spec.n_chunks, ell_cap=spec.ell_cap,
+        C=spec.C, ell_slack=spec.ell_slack, ovf_cap=spec.ovf_cap,
+        delta_cap=spec.delta_cap, frontier_frac=spec.frontier_frac,
+        max_rounds=spec.max_rounds, forbidden_impl=spec.forbidden_impl)
+    colors = st.colors
+    return col.ColoringResult(
+        colors=colors, n_rounds=st.last_rounds,
+        conflicts_per_round=np.array([st.last_conflicts]),
+        total_conflicts=st.last_conflicts,
+        n_colors=col.n_colors_used(colors),
+        overflow=st.retries > 0, gather_passes=st.last_gather_passes,
+        final_C=st.C, retries=st.retries, distance=1, state=st)

@@ -22,7 +22,7 @@ from repro.core import coloring as col
 from repro.core import schedule
 from repro.dynamic import delta
 from repro.dynamic.incremental import (DynamicColoringState, _check_edges,
-                                       dynamic_state, recolor_incremental)
+                                       recolor_incremental)
 from repro.graphs.csr import CSRGraph, to_edge_list
 
 
@@ -41,11 +41,27 @@ class ColoringService:
 
     # -- graph lifecycle ----------------------------------------------------
 
-    def add_graph(self, name: str, g: CSRGraph, **opts) -> int:
-        """Encode + color ``g`` from scratch; returns the initial version."""
+    def add_graph(self, name: str, g: CSRGraph, spec=None, **opts) -> int:
+        """Encode + color ``g`` from scratch; returns the initial version.
+
+        Routes through the ``repro.api.color`` front door with
+        ``mode='incremental'`` and keeps the resulting
+        ``DynamicColoringState``.  Precedence, most specific wins: per-call
+        ``opts`` > explicit ``spec`` > service construction defaults (the
+        defaults never override a spec the caller passed explicitly).
+        """
         if name in self._states:
             raise ValueError(f"graph {name!r} already registered")
-        self._states[name] = dynamic_state(g, **{**self._opts, **opts})
+        from repro import api
+        overrides = dict(opts) if spec is not None else {**self._opts,
+                                                         **opts}
+        mode = overrides.pop("mode", "incremental")
+        if mode != "incremental":
+            raise ValueError(
+                f"ColoringService graphs are incremental by construction "
+                f"(got mode={mode!r})")
+        res = api.color(g, spec, mode=mode, **overrides)
+        self._states[name] = res.state
         self._pending[name] = []
         return self._states[name].version
 

@@ -1,0 +1,312 @@
+"""The one-front-door API (DESIGN.md §11): ``repro.api.color`` + spec +
+registry.
+
+Covers the acceptance criteria of the redesign:
+  * every spec combo in the support matrix is exercised by a differential
+    test proving ``api.color(spec)`` is bit-identical to the pre-redesign
+    entry point it replaces;
+  * unsupported combos raise ValueError naming the nearest supported spec;
+  * every legacy ``color_*`` shim emits DeprecationWarning exactly once and
+    returns bit-identical colors to the equivalent spec call;
+  * every engine populates the ColoringResult invariant fields
+    (final_C / retries / distance) and echoes the resolved spec.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api, registry
+from repro.core import coloring as col
+from repro.core import distance2 as d2
+from repro.core import frontier as fr
+from repro.core import distributed as dist
+from repro.core.context import PassContext
+from repro.dynamic import dynamic_state
+from repro.graphs import generators as gen
+
+
+GRAPH = gen.mesh2d(14, 14)
+RMAT = gen.rmat_b(8, edge_factor=6)
+BIPARTITE = gen.bipartite_random(80, 50, 3.0, seed=7)
+N_LEFT = 80
+
+
+def _mesh1():
+    import jax
+    return jax.make_mesh((1,), ("data",))
+
+
+def _assert_identical(a, b, what):
+    np.testing.assert_array_equal(a.colors, b.colors, err_msg=what)
+    assert a.summary() == b.summary(), what
+
+
+# --------------------------------------------------------------------------
+# support-matrix differential: api.color(spec) == the entry point it replaces
+# --------------------------------------------------------------------------
+
+# (name, legacy call, equivalent spec overrides, graph) — one row per
+# registered combo in the support matrix (see api.supported_specs())
+MATRIX = {
+    "rsoc/1/static/local": (
+        lambda g: col.color_rsoc(g, seed=3),
+        dict(algorithm="rsoc", seed=3), GRAPH),
+    "cat/1/static/local": (
+        lambda g: col.color_cat(g, seed=3),
+        dict(algorithm="cat", seed=3), GRAPH),
+    "gm/1/static/local": (
+        lambda g: col.color_gm(g, seed=3),
+        dict(algorithm="gm", seed=3), GRAPH),
+    "jp/1/static/local": (
+        lambda g: col.color_jp(g, seed=3),
+        dict(algorithm="jp", seed=3, max_rounds=10000), GRAPH),
+    "rsoc_compact/1/static/local": (
+        lambda g: fr.color_rsoc_compact(g, seed=3),
+        dict(algorithm="rsoc_compact", seed=3), GRAPH),
+    "rsoc/2/static/local": (
+        lambda g: d2.color_distance2(g, seed=3),
+        dict(algorithm="rsoc", distance=2, seed=3), GRAPH),
+    "rsoc/2/partial/local": (
+        lambda g: d2.color_bipartite_partial(g, N_LEFT, seed=3),
+        dict(algorithm="rsoc", distance=2, mode="partial", n_left=N_LEFT,
+             seed=3), BIPARTITE),
+    "rsoc/1/incremental/local": (
+        lambda g: dynamic_state(g, seed=3),
+        dict(algorithm="rsoc", mode="incremental", seed=3), GRAPH),
+}
+
+
+@pytest.mark.parametrize("combo", sorted(MATRIX))
+def test_matrix_differential_vs_legacy(combo):
+    legacy_fn, overrides, g = MATRIX[combo]
+    legacy = legacy_fn(g)
+    res = api.color(g, **overrides)
+    if combo == "rsoc/1/incremental/local":
+        # legacy entry returns the state itself, not a ColoringResult
+        np.testing.assert_array_equal(res.colors, legacy.colors,
+                                      err_msg=combo)
+        assert res.final_C == legacy.C and res.retries == legacy.retries
+    else:
+        _assert_identical(res, legacy, combo)
+    a, d_, m, b = combo.split("/")
+    assert res.spec.algorithm == a and res.spec.distance == int(d_)
+    assert res.spec.mode == m and res.spec.backend == b
+
+
+@pytest.mark.parametrize("algo", ["rsoc", "cat"])
+def test_matrix_differential_distributed(algo):
+    """backend='distributed' rows of the matrix (1-device mesh: the engine
+    path is identical, only the collective payload is trivial)."""
+    mesh = _mesh1()
+    legacy = dist.color_distributed(GRAPH, mesh, axis="data", algorithm=algo,
+                                    seed=3, n_chunks=2)
+    res = api.color(GRAPH, algorithm=algo, backend="distributed", mesh=mesh,
+                    axis="data", seed=3, n_chunks=2, max_rounds=64)
+    _assert_identical(res, legacy, f"{algo}/distributed")
+    assert col.is_proper(GRAPH, res.colors)
+
+
+def test_matrix_is_exhaustive():
+    """Every registered combo is exercised by the differential suite above —
+    a new engine registration must add a matrix row here."""
+    covered = set(MATRIX) | {"rsoc/1/static/distributed",
+                             "cat/1/static/distributed"}
+    registered = {f"{a}/{d}/{m}/{b}"
+                  for (a, d, m, b) in registry.engine_keys()}
+    assert registered == covered, registered ^ covered
+
+
+# --------------------------------------------------------------------------
+# ColoringResult invariant: final_C / retries / distance set by every engine
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("combo", sorted(MATRIX))
+def test_result_invariant_fields(combo):
+    _, overrides, g = MATRIX[combo]
+    res = api.color(g, **overrides)
+    assert res.final_C > 0, combo
+    assert res.retries >= 0, combo
+    assert res.distance == res.spec.distance, combo
+    assert res.n_colors <= res.final_C, combo
+    assert res.spec == api.ColoringSpec(**overrides).resolved(), combo
+    if res.spec.mode == "incremental":
+        assert res.state is not None and res.state.C == res.final_C
+    else:
+        assert res.state is None
+
+
+def test_result_invariant_distributed():
+    res = api.color(GRAPH, backend="distributed", mesh=_mesh1(), seed=1,
+                    n_chunks=2, max_rounds=64)
+    assert res.final_C > 0 and res.retries == 0 and res.distance == 1
+
+
+# --------------------------------------------------------------------------
+# deprecation shims: one warning each, bit-identical to the spec call
+# --------------------------------------------------------------------------
+
+SHIMS = [
+    ("color_rsoc", lambda g: col.color_rsoc(g, seed=5),
+     dict(algorithm="rsoc", seed=5), GRAPH),
+    ("color_cat", lambda g: col.color_cat(g, seed=5),
+     dict(algorithm="cat", seed=5), GRAPH),
+    ("color_gm", lambda g: col.color_gm(g, seed=5),
+     dict(algorithm="gm", seed=5), GRAPH),
+    ("color_jp", lambda g: col.color_jp(g, seed=5),
+     dict(algorithm="jp", seed=5, max_rounds=10000), GRAPH),
+    ("color_rsoc_compact", lambda g: fr.color_rsoc_compact(g, seed=5),
+     dict(algorithm="rsoc_compact", seed=5), GRAPH),
+    ("color_distance2", lambda g: d2.color_distance2(g, seed=5),
+     dict(algorithm="rsoc", distance=2, seed=5), GRAPH),
+    ("color_bipartite_partial",
+     lambda g: d2.color_bipartite_partial(g, N_LEFT, seed=5),
+     dict(algorithm="rsoc", distance=2, mode="partial", n_left=N_LEFT,
+          seed=5), BIPARTITE),
+]
+
+
+@pytest.mark.parametrize("name,legacy_fn,overrides,g",
+                         SHIMS, ids=[s[0] for s in SHIMS])
+def test_shim_warns_exactly_once_and_matches(name, legacy_fn, overrides, g):
+    registry.reset_legacy_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        first = legacy_fn(g)
+        second = legacy_fn(g)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)
+           and name in str(x.message)]
+    assert len(dep) == 1, f"{name}: expected exactly one warning, got {dep}"
+    assert "repro.api.color" in str(dep[0].message)
+    res = api.color(g, **overrides)
+    _assert_identical(first, res, name)
+    _assert_identical(second, res, name + " (second call)")
+
+
+def test_algorithms_view_is_registry_backed_and_warning_free():
+    assert sorted(col.ALGORITHMS) == api.algorithms()
+    assert len(col.ALGORITHMS) == len(api.algorithms())
+    registry.reset_legacy_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        res = col.ALGORITHMS["rsoc"](GRAPH, seed=5)
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
+    _assert_identical(res, api.color(GRAPH, algorithm="rsoc", seed=5),
+                      "ALGORITHMS view")
+    with pytest.raises(KeyError):
+        col.ALGORITHMS["nope"]
+
+
+# --------------------------------------------------------------------------
+# spec validation: unsupported combos name the nearest supported spec
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("overrides,nearest", [
+    # distance-2 CAT is unsupported; the distance-2 task is served by rsoc
+    (dict(algorithm="cat", distance=2),
+     "algorithm='rsoc', distance=2, mode='static', backend='local'"),
+    # incremental mode exists — under rsoc
+    (dict(algorithm="gm", mode="incremental"),
+     "algorithm='rsoc', distance=1, mode='incremental', backend='local'"),
+    # the distributed backend exists — under rsoc/cat
+    (dict(algorithm="jp", backend="distributed"),
+     "distance=1, mode='static', backend='distributed'"),
+    # partial coloring is a distance-2 task
+    (dict(algorithm="rsoc", mode="partial", distance=1, n_left=4),
+     "algorithm='rsoc', distance=2, mode='partial', backend='local'"),
+])
+def test_unsupported_combo_names_nearest(overrides, nearest):
+    with pytest.raises(ValueError, match="nearest supported spec") as ei:
+        api.color(GRAPH, **overrides)
+    assert nearest in str(ei.value)
+
+
+@pytest.mark.parametrize("overrides", [
+    dict(mode="weird"),
+    dict(backend="tpu_pod"),
+    dict(forbidden_impl="packed"),
+    dict(n_chunks=0),
+    dict(max_rounds=0),
+    dict(C=-1),
+    dict(frontier_frac=0.0),
+    dict(n_left=10),                       # n_left without mode='partial'
+    dict(mode="partial", distance=2),      # partial without n_left
+])
+def test_malformed_spec_rejected(overrides):
+    with pytest.raises(ValueError):
+        api.color(GRAPH, **overrides)
+
+
+def test_unknown_override_and_bad_spec_type():
+    with pytest.raises(TypeError, match="unknown ColoringSpec override"):
+        api.color(GRAPH, algorithmn="rsoc")
+    with pytest.raises(TypeError, match="ColoringSpec"):
+        api.color(GRAPH, {"algorithm": "rsoc"})
+
+
+def test_mesh_only_for_distributed():
+    with pytest.raises(ValueError, match="distributed"):
+        api.color(GRAPH, mesh=object())
+    with pytest.raises(ValueError, match="mesh"):
+        api.color(GRAPH, backend="distributed")   # mesh missing
+
+
+# --------------------------------------------------------------------------
+# reproducibility: the echoed spec replays the run
+# --------------------------------------------------------------------------
+
+def test_spec_echo_replays_bit_identically():
+    res = api.color(RMAT, algorithm="rsoc", seed=9, n_chunks=8)
+    replay = api.color(RMAT, res.spec)
+    _assert_identical(res, replay, "spec replay")
+    assert replay.spec == res.spec
+    assert res.spec.spec_key() == replay.spec.spec_key()
+
+
+def test_spec_key_is_stable_and_resolved():
+    a = api.ColoringSpec(seed=1).spec_key()
+    b = api.ColoringSpec(seed=1).spec_key()
+    assert a == b
+    # key reflects the RESOLVED spec: impl default is pinned
+    assert "forbidden_impl=bitset" in a
+    assert api.ColoringSpec(seed=2).spec_key() != a
+
+
+# --------------------------------------------------------------------------
+# PassContext: the typed replacement for the p_static tuple
+# --------------------------------------------------------------------------
+
+def test_pass_context_builders_and_validation():
+    ctx = PassContext(n=10, n_pad=16, C=32, n_chunks=4)
+    assert ctx.unpack() == (10, 16, 32, 4, "bitset")
+    assert ctx.with_C(64).C == 64 and ctx.C == 32
+    assert hash(ctx) == hash(PassContext(10, 16, 32, 4))   # jit-cache key
+    with pytest.raises(ValueError):
+        PassContext(n=10, n_pad=16, C=32, n_chunks=0)
+    with pytest.raises(ValueError):
+        PassContext(n=10, n_pad=4, C=32, n_chunks=2)
+    with pytest.raises(ValueError):
+        PassContext(n=10, n_pad=16, C=32, n_chunks=2, forbidden_impl="nope")
+
+
+def test_service_spec_precedence():
+    """ColoringService.add_graph: per-call opts > explicit spec > service
+    defaults — construction defaults must not stomp an explicit spec, and a
+    conflicting mode is rejected, not TypeErrored."""
+    from repro.dynamic import ColoringService
+    g = gen.mesh2d(10, 10)
+    svc = ColoringService(seed=7, delta_cap=128)
+    svc.add_graph("a", g, spec=api.ColoringSpec(seed=3, delta_cap=128))
+    want = api.color(g, mode="incremental", seed=3, delta_cap=128)
+    np.testing.assert_array_equal(svc.colors("a"), want.colors)
+    svc.add_graph("b", g, mode="incremental")   # harmless explicit mode
+    with pytest.raises(ValueError, match="incremental"):
+        svc.add_graph("c", g, mode="static")
+
+
+def test_pass_context_for_problem():
+    prob = col.prepare(GRAPH, seed=0, n_chunks=4)
+    ctx = PassContext.for_problem(prob, n_chunks=4)
+    assert ctx.n == prob.n and ctx.n_pad == prob.n_pad and ctx.C == prob.C
+    assert ctx.forbidden_impl == "bitset"
+    assert PassContext.for_problem(prob, n_chunks=4, C=64).C == 64

@@ -1,0 +1,66 @@
+"""Public-API snapshot: the surface of ``repro.api`` (exported names, spec
+fields + defaults, PassContext fields, and the engine support matrix) is
+diffed against the checked-in snapshot ``tests/api_surface.json``.
+
+An intentional API change must update the snapshot in the same commit —
+regenerate with:
+
+    PYTHONPATH=src python tests/test_api_surface.py --update
+
+An *unintentional* diff (a renamed spec field, a dropped export, an engine
+silently falling out of the registry) fails here before it ships.  Runs
+under ``make test`` with the rest of the tier-1 suite.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+from repro import api, registry
+
+SNAPSHOT_PATH = os.path.join(os.path.dirname(__file__), "api_surface.json")
+
+
+def current_surface() -> dict:
+    return {
+        "api_all": sorted(api.__all__),
+        "spec_fields": {
+            f.name: repr(f.default)
+            for f in dataclasses.fields(api.ColoringSpec)},
+        "pass_context_fields": [
+            f.name for f in dataclasses.fields(api.PassContext)],
+        "engines": [
+            {"algorithm": a, "distance": d, "mode": m, "backend": b,
+             "replaces": fn.replaces}
+            for (a, d, m, b), fn in registry.engine_items()],
+        "modes": list(api.MODES),
+        "backends": list(api.BACKENDS),
+    }
+
+
+def test_api_surface_matches_snapshot():
+    with open(SNAPSHOT_PATH) as f:
+        want = json.load(f)
+    got = current_surface()
+    assert got == want, (
+        "repro.api surface drifted from tests/api_surface.json — if the "
+        "change is intentional, regenerate the snapshot with "
+        "`PYTHONPATH=src python tests/test_api_surface.py --update` and "
+        "commit it; diff keys: "
+        + str([k for k in want if want.get(k) != got.get(k)]
+              + [k for k in got if k not in want]))
+
+
+def test_every_exported_name_exists():
+    for name in api.__all__:
+        assert hasattr(api, name), name
+
+
+if __name__ == "__main__":
+    if "--update" in sys.argv:
+        with open(SNAPSHOT_PATH, "w") as f:
+            json.dump(current_surface(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {SNAPSHOT_PATH}")
+    else:
+        print(json.dumps(current_surface(), indent=1, sort_keys=True))

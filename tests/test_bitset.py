@@ -23,10 +23,10 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
+from repro import api
 from repro.core import bitset
 from repro.core import coloring as col
 from repro.core import distance2 as d2
-from repro.core.frontier import color_rsoc_compact
 from repro.graphs import generators as gen
 
 CAPS = (32, 64, 96, 256)
@@ -144,7 +144,7 @@ def test_ws_accounting():
 
 def test_unknown_impl_rejected():
     with pytest.raises(ValueError):
-        col.color_rsoc(gen.mesh2d(4, 4), forbidden_impl="packed")
+        api.color(gen.mesh2d(4, 4), forbidden_impl="packed")
 
 
 # --------------------------------------------------------------------------
@@ -176,8 +176,8 @@ def test_engine_bitset_equals_dense(gname, algo):
 @pytest.mark.parametrize("gname", sorted(GRAPHS))
 def test_compact_bitset_equals_dense(gname):
     g = GRAPHS[gname]()
-    _assert_identical(color_rsoc_compact(g, seed=3, forbidden_impl="bitset"),
-                      color_rsoc_compact(g, seed=3, forbidden_impl="dense"),
+    _assert_identical(api.color(g, algorithm="rsoc_compact", seed=3, forbidden_impl="bitset"),
+                      api.color(g, algorithm="rsoc_compact", seed=3, forbidden_impl="dense"),
                       f"rsoc_compact/{gname}")
 
 
@@ -185,28 +185,28 @@ def test_overflow_coo_bitset_equals_dense():
     """Capped-width hubs spill into the COO side-channel: the packed
     snapshot path (scatter-then-pack) must reproduce the dense run."""
     g = gen.rmat_b(9, edge_factor=16)
-    rb = col.color_rsoc(g, seed=3, ell_cap=8, forbidden_impl="bitset")
-    rd = col.color_rsoc(g, seed=3, ell_cap=8, forbidden_impl="dense")
+    rb = api.color(g, algorithm="rsoc", seed=3, ell_cap=8, forbidden_impl="bitset")
+    rd = api.color(g, algorithm="rsoc", seed=3, ell_cap=8, forbidden_impl="dense")
     _assert_identical(rb, rd, "rsoc/ovf")
     assert col.is_proper(g, rb.colors)
-    cb = color_rsoc_compact(g, seed=3, ell_cap=8, forbidden_impl="bitset")
-    cd = color_rsoc_compact(g, seed=3, ell_cap=8, forbidden_impl="dense")
+    cb = api.color(g, algorithm="rsoc_compact", seed=3, ell_cap=8, forbidden_impl="bitset")
+    cd = api.color(g, algorithm="rsoc_compact", seed=3, ell_cap=8, forbidden_impl="dense")
     _assert_identical(cb, cd, "rsoc_compact/ovf")
 
 
 @pytest.mark.parametrize("gname", sorted(GRAPHS))
 def test_distance2_bitset_equals_dense(gname):
     g = GRAPHS[gname]()
-    nb = d2.color_distance2(g, seed=1, forbidden_impl="bitset")
-    nd = d2.color_distance2(g, seed=1, forbidden_impl="dense")
+    nb = api.color(g, distance=2, seed=1, forbidden_impl="bitset")
+    nd = api.color(g, distance=2, seed=1, forbidden_impl="dense")
     _assert_identical(nb, nd, f"d2/{gname}")
     assert d2.is_distance_d_proper(g, nb.colors, 2)
 
 
 def test_bipartite_partial_bitset_equals_dense():
     g = GRAPHS["bipartite"]()
-    pb = d2.color_bipartite_partial(g, 150, seed=1, forbidden_impl="bitset")
-    pd = d2.color_bipartite_partial(g, 150, seed=1, forbidden_impl="dense")
+    pb = api.color(g, distance=2, mode="partial", n_left=150, seed=1, forbidden_impl="bitset")
+    pd = api.color(g, distance=2, mode="partial", n_left=150, seed=1, forbidden_impl="dense")
     _assert_identical(pb, pd, "bipartite_partial")
     assert d2.is_bipartite_partial_proper(g, 150, pb.colors)
 
@@ -215,8 +215,8 @@ def test_cap_doubling_retry_bitset_equals_dense():
     """Force overflow (tiny explicit C) so the shared _run_with_retry
     doubles the cap: retry trajectory must match across impls."""
     g = gen.mesh2d(12, 12)
-    rb = col.color_rsoc(g, seed=0, C=2, forbidden_impl="bitset")
-    rd = col.color_rsoc(g, seed=0, C=2, forbidden_impl="dense")
+    rb = api.color(g, algorithm="rsoc", seed=0, C=2, forbidden_impl="bitset")
+    rd = api.color(g, algorithm="rsoc", seed=0, C=2, forbidden_impl="dense")
     _assert_identical(rb, rd, "retry")
     assert rb.retries > 0 and rb.overflow
 

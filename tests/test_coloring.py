@@ -12,8 +12,8 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
+from repro import api
 from repro.core import coloring as col
-from repro.core.frontier import color_rsoc_compact
 from repro.core.distance2 import color_distance_d, is_distance_d_proper
 from repro.graphs import generators as gen
 from repro.graphs.csr import CSRGraph, from_edges, power_graph
@@ -59,8 +59,8 @@ def test_rsoc_quality_matches_cat(gname):
     of colors, near the serial greedy level (<= +20% tolerance band)."""
     g = GRAPHS[gname]
     serial = col.n_colors_used(col.greedy_sequential(g))
-    r = col.color_rsoc(g, seed=2).n_colors
-    c = col.color_cat(g, seed=2).n_colors
+    r = api.color(g, algorithm="rsoc", seed=2).n_colors
+    c = api.color(g, algorithm="cat", seed=2).n_colors
     assert r <= max(serial * 1.25 + 2, c * 1.25 + 2)
     assert c <= serial * 1.25 + 2
 
@@ -70,8 +70,8 @@ def test_rsoc_fewer_gather_passes(gname):
     """The structural speedup: RSOC does ~half the neighbor-gather sweeps
     (1/round vs CAT's 2/round) and never more rounds (paper Figs 5-6)."""
     g = GRAPHS[gname]
-    r = col.color_rsoc(g, seed=3)
-    c = col.color_cat(g, seed=3)
+    r = api.color(g, algorithm="rsoc", seed=3)
+    c = api.color(g, algorithm="cat", seed=3)
     assert r.gather_passes < c.gather_passes
     assert r.n_rounds <= c.n_rounds + 1
 
@@ -81,12 +81,12 @@ def test_lockstep_termination():
     simultaneous wave) livelocks WITHOUT asymmetric tie-breaking; our hashed
     priority guarantees termination.  The 2-vertex example of Fig. 7."""
     g = from_edges(2, np.array([[0, 1]]))
-    res = col.color_rsoc(g, seed=0, n_chunks=1, max_rounds=50)
+    res = api.color(g, algorithm="rsoc", seed=0, n_chunks=1, max_rounds=50)
     assert col.is_proper(g, res.colors)
     assert res.n_rounds < 10
     # and a dense lockstep case
     g2 = gen.erdos_renyi(256, 16.0, seed=5)
-    res2 = col.color_rsoc(g2, seed=0, n_chunks=1, max_rounds=200)
+    res2 = api.color(g2, algorithm="rsoc", seed=0, n_chunks=1, max_rounds=200)
     assert col.is_proper(g2, res2.colors)
 
 
@@ -94,8 +94,8 @@ def test_conflicts_decrease_with_chunks():
     """More sequential chunks = fresher data = fewer conflicts (the paper's
     freshness argument, recovered deterministically)."""
     g = GRAPHS["rmat_b"]
-    lockstep = col.color_rsoc(g, seed=4, n_chunks=1)
-    chunked = col.color_rsoc(g, seed=4, n_chunks=32)
+    lockstep = api.color(g, algorithm="rsoc", seed=4, n_chunks=1)
+    chunked = api.color(g, algorithm="rsoc", seed=4, n_chunks=32)
     assert chunked.total_conflicts <= lockstep.total_conflicts
 
 
@@ -106,7 +106,7 @@ def test_conflicts_decrease_with_chunks():
 @pytest.mark.parametrize("gname", sorted(GRAPHS))
 def test_frontier_compact_proper(gname):
     g = GRAPHS[gname]
-    res = color_rsoc_compact(g, seed=5)
+    res = api.color(g, algorithm="rsoc_compact", seed=5)
     assert col.is_proper(g, res.colors)
 
 
@@ -115,7 +115,7 @@ def test_distance2_coloring():
     res, gd = color_distance_d(g, d=2, algorithm="rsoc", seed=0)
     assert is_distance_d_proper(g, res.colors, 2)
     # G^2 is denser; needs at least as many colors as G
-    res1 = col.color_rsoc(g, seed=0)
+    res1 = api.color(g, algorithm="rsoc", seed=0)
     assert res.n_colors >= res1.n_colors
 
 
@@ -129,7 +129,7 @@ def test_gm_repair_includes_overflow_edges():
     from the ELL rows only, producing improper colorings."""
     g = gen.rmat_b(9, edge_factor=16)
     assert g.max_degree > 8  # the cap below really forces overflow
-    res = col.color_gm(g, seed=1, ell_cap=8)
+    res = api.color(g, algorithm="gm", seed=1, ell_cap=8)
     assert col.is_proper(g, res.colors)
 
 
@@ -138,13 +138,13 @@ def test_cap_doubling_recorded():
     n = 48
     ii, jj = np.meshgrid(np.arange(n), np.arange(n))
     g = from_edges(n, np.stack([ii[ii != jj], jj[ii != jj]], axis=1))
-    res = col.color_rsoc(g, seed=0, C=32)
+    res = api.color(g, algorithm="rsoc", seed=0, C=32)
     assert col.is_proper(g, res.colors) and res.n_colors == n
     assert res.retries >= 1 and res.overflow and res.final_C >= n
     s = res.summary()
     assert s["final_C"] == res.final_C and s["retries"] == res.retries
     # no doubling needed -> retries 0 and final_C is the requested cap
-    res2 = col.color_rsoc(g, seed=0, C=64)
+    res2 = api.color(g, algorithm="rsoc", seed=0, C=64)
     assert res2.retries == 0 and not res2.overflow and res2.final_C == 64
 
 
@@ -185,7 +185,7 @@ if HAVE_HYPOTHESIS:
     def test_property_power_graph_contains_base(g, seed):
         """G^2 proper coloring is also proper on G (power graph ⊇ G)."""
         gd = power_graph(g, 2)
-        res = col.color_rsoc(gd, seed=seed)
+        res = api.color(gd, algorithm="rsoc", seed=seed)
         assert col.is_proper(g, res.colors)
 
     @given(st.integers(2, 40), st.integers(0, 3))
@@ -195,7 +195,7 @@ if HAVE_HYPOTHESIS:
         ii, jj = np.meshgrid(np.arange(n), np.arange(n))
         edges = np.stack([ii[ii != jj], jj[ii != jj]], axis=1)
         g = from_edges(n, edges)
-        res = col.color_rsoc(g, seed=seed, C=32)
+        res = api.color(g, algorithm="rsoc", seed=seed, C=32)
         assert col.is_proper(g, res.colors)
         assert res.n_colors == n
 else:
@@ -215,7 +215,7 @@ else:
         rng = np.random.default_rng(2000 + case)
         g = _np_random_graph(rng)
         gd = power_graph(g, 2)
-        res = col.color_rsoc(gd, seed=case)
+        res = api.color(gd, algorithm="rsoc", seed=case)
         assert col.is_proper(g, res.colors)
 
     @pytest.mark.parametrize("n,seed", [(2, 0), (17, 1), (33, 2), (40, 3)])
@@ -223,6 +223,6 @@ else:
         ii, jj = np.meshgrid(np.arange(n), np.arange(n))
         edges = np.stack([ii[ii != jj], jj[ii != jj]], axis=1)
         g = from_edges(n, edges)
-        res = col.color_rsoc(g, seed=seed, C=32)
+        res = api.color(g, algorithm="rsoc", seed=seed, C=32)
         assert col.is_proper(g, res.colors)
         assert res.n_colors == n

@@ -17,8 +17,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import numpy as np
 import jax
+from repro import api
 from repro.core import coloring as col
-from repro.core.distributed import color_distributed
 from repro.graphs import generators as gen
 
 mesh = jax.make_mesh((8,), ("data",))
@@ -26,8 +26,9 @@ out = {}
 for gname, g in [("mesh2d", gen.mesh2d(24, 24)),
                  ("rmat", gen.rmat_b(9, 8))]:
     for algo in ("rsoc", "cat"):
-        res = color_distributed(g, mesh, axis="data", algorithm=algo,
-                                seed=1, n_chunks=2)
+        res = api.color(g, algorithm=algo, backend="distributed",
+                        mesh=mesh, axis="data", seed=1, n_chunks=2,
+                        max_rounds=64)
         out[f"{gname}.{algo}"] = {
             "proper": bool(col.is_proper(g, res.colors)),
             "colors": int(res.n_colors),

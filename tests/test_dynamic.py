@@ -164,11 +164,13 @@ def test_uncolored_seed_repair_is_verified():
     n_pad = prob.n_pad
     colors0 = jnp.full((n_pad,), -1, jnp.int32)
     U0 = jnp.arange(n_pad) < prob.n
-    p_static = (prob.n, n_pad, prob.C, 1, col.DEFAULT_FORBIDDEN_IMPL)
+    # typed PassContext builder, not a hand-rolled positional tuple — the
+    # tuple shape drifted once (PR 3) and must not silently drift again
+    ctx = col.PassContext.for_problem(prob, n_chunks=1)
     for loop, extra in ((col._rsoc_repair_loop, ()),
                         (frontier._repair_compact_loop, (n_pad,))):
         out = loop(prob.ell, prob.ovf_src, prob.ovf_dst, prob.pri,
-                   colors0, U0, p_static, *extra, 50)
+                   colors0, U0, ctx, *extra, 50)
         colors = np.asarray(out[0])[:prob.n]
         assert col.is_proper(g, colors), loop.__name__
 

@@ -21,6 +21,7 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
+from repro import api
 from repro.core import coloring as col
 from repro.core import distance2 as d2
 from repro.graphs import generators as gen
@@ -100,7 +101,7 @@ def test_relabel_invariance(gname, algo):
 @pytest.mark.parametrize("gname", sorted(GRAPHS))
 def test_native_d2_proper_on_power_graph(gname):
     g = GRAPHS[gname]
-    res = d2.color_distance2(g, seed=1)
+    res = api.color(g, distance=2, seed=1)
     assert d2.is_distance_d_proper(g, res.colors, 2)
     assert res.distance == 2
     gd = power_graph(g, 2)
@@ -113,7 +114,7 @@ def test_native_d2_matches_materialized_band():
     """Native and materialized paths are the same algorithm on the same
     conflict graph: identical seed must land in the same quality band."""
     g = GRAPHS["mesh3d"]
-    nat = d2.color_distance2(g, seed=2)
+    nat = api.color(g, distance=2, seed=2)
     mat, gd = d2.color_distance_d(g, d=2, algorithm="rsoc", seed=2)
     assert nat.distance == 2 and mat.distance == 2
     assert col.is_proper(gd, nat.colors) and col.is_proper(gd, mat.colors)
@@ -122,8 +123,8 @@ def test_native_d2_matches_materialized_band():
 
 def test_native_d2_determinism():
     g = GRAPHS["mesh2d"]
-    a = d2.color_distance2(g, seed=4)
-    b = d2.color_distance2(g, seed=4)
+    a = api.color(g, distance=2, seed=4)
+    b = api.color(g, distance=2, seed=4)
     np.testing.assert_array_equal(a.colors, b.colors)
 
 
@@ -136,7 +137,7 @@ def test_native_d2_never_materializes(monkeypatch):
         raise AssertionError("native path materialized G^2")
 
     monkeypatch.setattr(d2, "power_graph", boom)
-    res = d2.color_distance2(g, seed=0)
+    res = api.color(g, distance=2, seed=0)
     monkeypatch.undo()
     assert d2.is_distance_d_proper(g, res.colors, 2)
 
@@ -146,7 +147,7 @@ def test_native_d2_rejects_overflow_graphs():
     the COO side-channel — the native path must refuse, not miscolor."""
     g = _star(40)
     with pytest.raises(ValueError):
-        d2.color_distance2(g, ell_cap=8)
+        api.color(g, distance=2, ell_cap=8)
     # the materialized oracle still handles it
     res, gd = d2.color_distance_d(g, d=2, algorithm="rsoc", ell_cap=8)
     assert col.is_proper(gd, res.colors)
@@ -156,7 +157,7 @@ def test_star_graph_d2_needs_n_colors():
     """Star S_n has diameter 2: every vertex is within two hops of every
     other, so the distance-2 chromatic number is exactly n."""
     g = _star(40)
-    res = d2.color_distance2(g, seed=1)
+    res = api.color(g, distance=2, seed=1)
     assert res.n_colors == 40
     assert d2.is_distance_d_proper(g, res.colors, 2)
 
@@ -171,7 +172,7 @@ def test_star_graph_d2_needs_n_colors():
 ])
 def test_bipartite_partial_proper_and_bounded(maker, n_left):
     g = maker()
-    res = d2.color_bipartite_partial(g, n_left, seed=1)
+    res = api.color(g, distance=2, mode="partial", n_left=n_left, seed=1)
     assert len(res.colors) == n_left
     assert d2.is_bipartite_partial_proper(g, n_left, res.colors)
     oracle = d2.bipartite_partial_oracle(g, n_left)
@@ -181,8 +182,8 @@ def test_bipartite_partial_proper_and_bounded(maker, n_left):
 
 def test_bipartite_partial_determinism():
     g = GRAPHS["bipartite"]
-    a = d2.color_bipartite_partial(g, 300, seed=6)
-    b = d2.color_bipartite_partial(g, 300, seed=6)
+    a = api.color(g, distance=2, mode="partial", n_left=300, seed=6)
+    b = api.color(g, distance=2, mode="partial", n_left=300, seed=6)
     np.testing.assert_array_equal(a.colors, b.colors)
 
 
@@ -193,7 +194,7 @@ def test_complete_bipartite_left_needs_n_left_colors():
     ii, jj = np.meshgrid(np.arange(a_n), np.arange(b_n), indexing="ij")
     g = from_edges(a_n + b_n,
                    np.stack([ii.ravel(), a_n + jj.ravel()], 1))
-    res = d2.color_bipartite_partial(g, a_n, seed=0)
+    res = api.color(g, distance=2, mode="partial", n_left=a_n, seed=0)
     assert res.n_colors == a_n
     assert d2.is_bipartite_partial_proper(g, a_n, res.colors)
 
@@ -219,14 +220,14 @@ def _np_random_bipartite(rng):
 
 
 def _check_native_d2(g, seed):
-    res = d2.color_distance2(g, seed=seed)
+    res = api.color(g, distance=2, seed=seed)
     assert d2.is_distance_d_proper(g, res.colors, 2)
     gd = power_graph(g, 2)
     assert res.n_colors <= gd.max_degree + 1
 
 
 def _check_bipartite_partial(g, nl, seed):
-    res = d2.color_bipartite_partial(g, nl, seed=seed)
+    res = api.color(g, distance=2, mode="partial", n_left=nl, seed=seed)
     assert d2.is_bipartite_partial_proper(g, nl, res.colors)
 
 
