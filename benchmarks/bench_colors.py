@@ -22,7 +22,7 @@ def main(scale: str = "small") -> None:
             csv.row(gname, g.max_degree, algo, res.n_colors, serial,
                     res.n_colors / max(serial, 1),
                     forb_ws_mb(g.n_vertices, 16, res.final_C),
-                    spec=res.spec)
+                    spec=res.spec, result=res)
 
 
 if __name__ == "__main__":

@@ -25,7 +25,7 @@ def main(scale: str = "small") -> None:
                         max(g.n_vertices // n_chunks, 1),
                         res.total_conflicts, res.n_rounds, res.n_colors,
                         forb_ws_mb(g.n_vertices, n_chunks, res.final_C),
-                        spec=res.spec)
+                        spec=res.spec, result=res)
 
 
 if __name__ == "__main__":

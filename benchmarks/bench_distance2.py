@@ -60,7 +60,7 @@ def main(scale: str = "small") -> None:
                         mat_ms[algo], res.n_rounds, res.gather_passes,
                         res.total_conflicts, res.n_colors, ws_mat,
                         forb_ws_mb(gd.n_vertices, 16, res.final_C),
-                        spec=res.spec)
+                        spec=res.spec, result=res)
             if d != 2:
                 continue
             spec = api.ColoringSpec(algorithm="rsoc", distance=2, seed=1)
@@ -71,7 +71,7 @@ def main(scale: str = "small") -> None:
                     res.n_rounds, res.gather_passes, res.total_conflicts,
                     res.n_colors, ws_nat,
                     forb_ws_mb(g.n_vertices, 16, res.final_C),
-                    spec=res.spec)
+                    spec=res.spec, result=res)
             print(f"# native-vs-materialized {gname} d=2: "
                   f"native {nat_ms:.1f}ms / {ws_nat:.2f}MB ws  vs  "
                   f"materialized(rsoc) {mat_ms['rsoc']:.1f}ms / "

@@ -86,7 +86,9 @@ def main(scale: str = "small") -> None:
                     scratch.gather_passes / max(inc_passes, 1),
                     proper,
                     forb_ws_mb(st.frontier_cap, st.n_chunks, st.C),
-                    spec=inc_spec)
+                    spec=inc_spec,
+                    extra={"n_rounds": st.last_rounds,
+                           "retries": st.retries})
             if abs(frac - 0.01) < 1e-12:
                 ok = proper and inc_passes < scratch.gather_passes
                 print(f"# acceptance[{gname}]: 1% batch proper={proper} "

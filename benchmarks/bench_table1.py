@@ -30,7 +30,7 @@ def main(scale: str = "small") -> None:
                     res.n_rounds, res.gather_passes, res.total_conflicts,
                     res.n_colors,
                     forb_ws_mb(g.n_vertices, 16, res.final_C),
-                    spec=res.spec)
+                    spec=res.spec, result=res)
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ import numpy as np
 
 from repro.core import bitset
 from repro.graphs import generators as gen
+from repro.obs import metrics as obs_metrics
 
 # Active JSON row collector.  ``run.py --json`` installs a list here around
 # each section; every Csv.row() then also lands as a dict keyed by the CSV
@@ -67,19 +68,35 @@ class Csv:
     def __init__(self, header):
         self.header = list(header)
         self.rows = []
+        self._fallbacks_seen = obs_metrics.total_matching("kernels.fallback")
         print(",".join(self.header), flush=True)
 
-    def row(self, *vals, spec=None):
+    def row(self, *vals, spec=None, result=None, extra=None):
         """Emit one CSV row.  ``spec`` (a ``repro.api.ColoringSpec``) is not
         printed, but under ``run.py --json`` it lands in the JSON row as the
         resolved spec dict plus its stable ``spec_key`` — every coloring row
-        records exactly which task produced it."""
+        records exactly which task produced it.
+
+        ``result`` (a ``ColoringResult``) contributes the obs columns
+        ``n_rounds``/``retries``; ``extra`` is a dict of additional JSON-only
+        keys (e.g. state-derived stats where no result is at hand).  Every
+        JSON row also carries ``kernel_fallbacks`` — the process-wide
+        ``kernels.fallback`` counter delta since this table's previous row.
+        """
         if _json_rows is not None:
             d = {h: _jsonable(v) for h, v in zip(self.header, vals)}
             if spec is not None:
                 resolved = spec.resolved()
                 d["spec"] = resolved.asdict()
                 d["spec_key"] = resolved.spec_key()
+            if result is not None:
+                d["n_rounds"] = int(result.n_rounds)
+                d["retries"] = int(result.retries)
+            if extra:
+                d.update({k: _jsonable(v) for k, v in extra.items()})
+            fb = obs_metrics.total_matching("kernels.fallback")
+            d.setdefault("kernel_fallbacks", fb - self._fallbacks_seen)
+            self._fallbacks_seen = fb
             _json_rows.append(d)
         vals = [f"{v:.6g}" if isinstance(v, float) else str(v) for v in vals]
         self.rows.append(vals)

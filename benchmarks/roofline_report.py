@@ -1,4 +1,13 @@
-"""Format results/dryrun.jsonl into the EXPERIMENTS.md roofline tables."""
+"""Format results/dryrun.jsonl into the EXPERIMENTS.md roofline tables.
+
+``--bench BENCH_*.json`` additionally formats the benchmark-runner JSON
+dumps (benchmarks.run --json) into a per-kernel achieved-vs-peak memory
+bandwidth table: achieved bytes/s is bounded below by the forbidden-table
+working set streamed once per gather pass (ws_mb * gather_passes / wall),
+compared against ``--peak-gbs``.  Rows from files written before the obs
+columns existed lack n_rounds/retries/kernel_fallbacks — those backfill
+null-safely as "-", never KeyError.
+"""
 from __future__ import annotations
 
 import argparse
@@ -49,11 +58,60 @@ def table(rows, mesh="16x16"):
     return "\n".join(out)
 
 
+def _achieved_bytes_s(r):
+    """Lower bound on achieved memory bandwidth of one coloring row: the
+    forbidden working set is streamed at least once per gather pass."""
+    ms, ws_mb = r.get("ms"), r.get("ws_mb")
+    if not ms or not ws_mb:
+        return None
+    passes = r.get("gather_passes") or 1
+    return ws_mb * 2**20 * max(passes, 1) / (ms / 1e3)
+
+
+def bench_table(paths, peak_gbs: float):
+    """Per-(section, graph, algo) achieved-vs-peak bandwidth table from
+    BENCH_*.json dumps, with null-safe backfill of the obs columns
+    (n_rounds / retries / kernel_fallbacks) for pre-obs files."""
+    out = ["| section | graph | algo | ms | rounds | retries | fallbacks | "
+           "achieved B/s | peak frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    peak = peak_gbs * 1e9
+    for path in paths:
+        with open(path) as f:
+            dump = json.load(f)
+        for r in dump.get("rows", []):
+            if r.get("ms") is None:
+                continue
+            ach = _achieved_bytes_s(r)
+            frac = f"{ach / peak:.4f}" if ach is not None else "-"
+            nr = r.get("n_rounds")       # absent in pre-obs dumps -> "-"
+            rt = r.get("retries")
+            fb = r.get("kernel_fallbacks")
+            out.append(
+                f"| {dump.get('section', path)} | {r.get('graph', '-')} | "
+                f"{r.get('algo', r.get('variant', '-'))} | "
+                f"{r['ms']:.3g} | "
+                f"{nr if nr is not None else '-'} | "
+                f"{rt if rt is not None else '-'} | "
+                f"{fb if fb is not None else '-'} | "
+                f"{fmt(ach, 'B/s')} | {frac} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--jsonl", default="results/dryrun.jsonl")
     ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--bench", nargs="*", default=None,
+                    help="BENCH_*.json dumps to format (benchmarks.run "
+                         "--json); skips the dryrun table when given")
+    ap.add_argument("--peak-gbs", type=float, default=50.0,
+                    help="peak memory bandwidth (GB/s) for the achieved-vs-"
+                         "peak fraction")
     args = ap.parse_args()
+    if args.bench:
+        print(bench_table(args.bench, args.peak_gbs))
+        return
     rows = load(args.jsonl)
     print(table(rows, args.mesh))
     n_ok = sum(1 for r in rows.values() if r.get("ok"))

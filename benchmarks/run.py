@@ -36,9 +36,12 @@ SCALES = ["tiny", "small", "medium"]
 
 # keys every BENCH_*.json row carries (None when the section lacks them);
 # spec/spec_key are the resolved repro.api.ColoringSpec of the row's coloring
-# call (None for rows that never invoke a coloring engine, e.g. lm_step)
+# call (None for rows that never invoke a coloring engine, e.g. lm_step);
+# n_rounds/retries come from the row's ColoringResult and kernel_fallbacks
+# is the kernels.fallback counter delta attributed to the row (DESIGN.md §12)
 NORMALIZED_KEYS = ("graph", "algo", "ms", "ws_mb", "colors",
-                   "gather_passes", "spec_key", "spec")
+                   "gather_passes", "spec_key", "spec",
+                   "n_rounds", "retries", "kernel_fallbacks")
 
 
 def lm_step(scale: str = "small") -> None:
@@ -140,18 +143,26 @@ def main(argv=None) -> None:
     for name in names:
         print(f"\n===== bench: {name} (scale={scale}) =====", flush=True)
         t0 = time.perf_counter()
+        import contextlib
+        tc_ctx = contextlib.nullcontext()
         if emit_json:
             from benchmarks import common
+            from repro import obs
             common.start_json_capture()
+            tc_ctx = obs.trace()       # collect a RunTrace per api.color call
         try:
-            _section(name)(scale=scale)
+            with tc_ctx as tc:
+                _section(name)(scale=scale)
         finally:
             elapsed = time.perf_counter() - t0
             if emit_json:
                 from benchmarks import common
+                from repro.obs import export
                 path = _write_json(name, scale, common.end_json_capture(),
                                    elapsed)
                 print(f"# wrote {path}", flush=True)
+                n = export.write_jsonl(tc.traces, f"TRACE_{name}.jsonl")
+                print(f"# wrote TRACE_{name}.jsonl ({n} traces)", flush=True)
         print(f"===== {name} done in {elapsed:.1f}s =====", flush=True)
 
 

@@ -60,3 +60,22 @@ try:
     api.color(g, algorithm="cat", distance=2)
 except ValueError as e:
     print(f"unsupported combo rejected: {e}")
+
+# 9. observability: spec.trace attaches a RunTrace (per-round conflicts,
+#    per-phase wall time, cap-retries) to the result; trace=False (the
+#    default) compiles the exact same device program as before the obs
+#    layer existed — zero overhead when off (DESIGN.md §12)
+res = api.color(g, algorithm="rsoc", seed=0, trace=True)
+print(res.trace.summary_line())
+for ph in res.trace.phases:
+    print(f"  phase {ph.name:<8} {ph.wall_s * 1e3:8.1f}ms  {ph.meta}")
+
+# 10. or scope a collector around existing untraced calls — every
+#     api.color inside the block is traced and collected
+from repro import obs
+with obs.trace() as tc:
+    api.color(g, algorithm="cat", seed=0)
+    api.color(g, distance=2, seed=0)
+print(f"collected {len(tc.traces)} traces:")
+for t in tc.traces:
+    print(" ", t.summary_line())

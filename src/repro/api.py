@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro import registry
+from repro import obs, registry
 from repro.registry import register_engine  # noqa: F401  (re-export)
 from repro.core.context import (DEFAULT_FORBIDDEN_IMPL, PassContext,
                                 resolve_impl)
@@ -76,6 +76,9 @@ class ColoringSpec:
     ell_slack: int = 4             # mode="incremental": free ELL slots/row
     ovf_cap: Optional[int] = None  # mode="incremental": overflow buffer cap
     delta_cap: int = 2048          # mode="incremental": update-slice width
+    trace: bool = False            # attach an obs.RunTrace to result.trace
+                                   # (zero device overhead when False; also
+                                   # forced by obs.trace() / REPRO_TRACE=1)
 
     # -- resolution / validation -------------------------------------------
 
@@ -180,7 +183,16 @@ def color(g, spec: Optional[ColoringSpec] = None, *,
         raise ValueError(
             f"mesh=/axis= are only meaningful with backend='distributed' "
             f"(spec.backend={spec.backend!r})")
-    return dataclasses.replace(engine(g, spec, **kw), spec=spec)
+    if not obs.tracing_enabled(spec.trace):
+        # untraced fast path: byte-for-byte the pre-obs call
+        return dataclasses.replace(engine(g, spec, **kw), spec=spec)
+    with obs.run_tracer() as tracer:
+        res = engine(g, spec, **kw)
+    engine_key = registry.format_key(
+        (spec.algorithm, spec.distance, spec.mode, spec.backend))
+    run_trace = tracer.finish(res, spec, engine_key, g.n_vertices)
+    obs.collect(run_trace)
+    return dataclasses.replace(res, spec=spec, trace=run_trace)
 
 
 def supported_specs() -> list[dict]:

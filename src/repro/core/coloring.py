@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from collections.abc import Mapping
 from typing import Optional
 
@@ -50,6 +51,7 @@ from repro.core import bitset
 from repro.core.context import (DEFAULT_FORBIDDEN_IMPL, PassContext,
                                 resolve_impl)
 from repro.graphs.csr import CSRGraph, FILL, from_edges, to_edge_list, to_ell
+from repro import obs
 
 MAX_ROUNDS_TRACE = 64  # fixed-size conflict trace (while_loop-friendly)
 
@@ -80,6 +82,14 @@ class ColoringResult:
     spec: Optional[object] = None
     # mode="incremental" only: the DynamicColoringState behind the colors
     state: Optional[object] = None
+    # True iff n_rounds exceeded the MAX_ROUNDS_TRACE device buffer, i.e.
+    # conflicts_per_round is a clipped view with the tail collapsed into its
+    # last slot (also warned once per process — see _trim_trace)
+    trace_truncated: bool = False
+    # the obs.RunTrace of this run when tracing was on (api.color attaches
+    # it); typed as object because this module must not import repro.obs.*
+    # artifacts at class scope
+    trace: Optional[object] = None
 
     def summary(self) -> dict:
         return {"rounds": int(self.n_rounds),
@@ -89,6 +99,34 @@ class ColoringResult:
                 "final_C": int(self.final_C),
                 "retries": int(self.retries),
                 "distance": int(self.distance)}
+
+
+_trace_truncation_warned = False
+
+
+def _trim_trace(trace, n_rounds):
+    """Per-round conflict trace, clipped to the rounds that actually ran.
+
+    The device-side trace buffer is a fixed MAX_ROUNDS_TRACE slots (the
+    while-loop carry needs a static shape), and runs past it used to hand
+    back a silently-clipped 64-row array.  The clipping is now explicit:
+    returns ``(trimmed, truncated)`` where ``truncated`` lands on
+    ``ColoringResult.trace_truncated``, plus a once-per-process warning the
+    first time a run overruns the buffer.
+    """
+    global _trace_truncation_warned
+    n_rounds = int(n_rounds)
+    trimmed = np.asarray(trace).reshape(-1)[:min(n_rounds, MAX_ROUNDS_TRACE)]
+    truncated = n_rounds > MAX_ROUNDS_TRACE
+    if truncated and not _trace_truncation_warned:
+        _trace_truncation_warned = True
+        warnings.warn(
+            f"conflicts_per_round truncated: {n_rounds} repair rounds "
+            f"exceed the MAX_ROUNDS_TRACE={MAX_ROUNDS_TRACE} device trace "
+            f"buffer, so rounds past it collapsed into the last slot "
+            f"(ColoringResult.trace_truncated=True flags this run; this "
+            f"warning fires once per process)", RuntimeWarning, stacklevel=3)
+    return trimmed, truncated
 
 
 def is_proper(g: CSRGraph, colors: np.ndarray) -> bool:
@@ -358,18 +396,28 @@ def _fused_repair(ctx, ell, osrc, odst, pri, colors, U, max_rounds,
     seed set U and partial coloring.  Vertices in U are re-colored only when
     defective *right now*; uncolored seeds (colors < 0) are force-colored on
     their first pass.  Returns (colors, n_rounds, trace, total_defects, ovf)
-    — one neighbor-gather pass per round.
+    — one neighbor-gather pass per round — or, under the static
+    ``ctx.trace`` flag, (colors, n_rounds, trace, ftrace, total_defects,
+    ovf) with a per-round |U| trace spliced in BEFORE the trailing pair so
+    the retry contract (overflow flag last) survives.  ``ctx.trace`` is a
+    jit-cache key: the False program is exactly the pre-obs one.
     """
     n, n_pad, C, n_chunks, impl = ctx.unpack()
 
     def cond(s):
         # terminate when a full fused pass detected zero defects: colors were
         # untouched during that pass, so its detection was complete.
-        colors, U, trace, r, tot, last_def, ovf = s
-        return (last_def > 0) & (r < max_rounds)
+        # (state tail is fixed at (..., r, tot, last_def, ovf) whether or
+        # not the optional ftrace rides along)
+        return (s[-2] > 0) & (s[-4] < max_rounds)
 
     def body(s):
-        colors, U, trace, r, tot, last_def, ovf = s
+        if ctx.trace:
+            colors, U, trace, ftrace, r, tot, last_def, ovf = s
+            ftrace = ftrace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(
+                U.sum(dtype=jnp.int32))
+        else:
+            colors, U, trace, r, tot, last_def, ovf = s
         force = U & (colors < 0)
         # ONE fused detect-and-recolor pass
         colors2, recolored, n_def, ovf2 = _chunked_pass(
@@ -379,13 +427,20 @@ def _fused_repair(ctx, ell, osrc, odst, pri, colors, U, max_rounds,
         # loop alive so the next pass checks them (two adjacent uncolored
         # seeds can pick the same color from one snapshot)
         n_work = n_def + force.sum(dtype=jnp.int32)
-        return (colors2, recolored, trace, r + 1, tot + n_def, n_work,
-                ovf | ovf2)
+        head = ((colors2, recolored, trace, ftrace) if ctx.trace
+                else (colors2, recolored, trace))
+        return head + (r + 1, tot + n_def, n_work, ovf | ovf2)
 
     trace = jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32)
-    state = (colors, U, trace, jnp.int32(0), jnp.int32(0), jnp.int32(1),
-             jnp.bool_(ovf0))
-    colors, U, trace, r, tot, _, ovf = jax.lax.while_loop(cond, body, state)
+    head = ((colors, U, trace, jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32))
+            if ctx.trace else (colors, U, trace))
+    state = head + (jnp.int32(0), jnp.int32(0), jnp.int32(1),
+                    jnp.bool_(ovf0))
+    out = jax.lax.while_loop(cond, body, state)
+    if ctx.trace:
+        colors, U, trace, ftrace, r, tot, _, ovf = out
+        return colors, r, trace, ftrace, tot, ovf
+    colors, U, trace, r, tot, _, ovf = out
     return colors, r, trace, tot, ovf
 
 
@@ -399,18 +454,15 @@ def _rsoc_loop(ell, osrc, odst, pri, ctx, max_rounds):
     # round 0: tentative coloring of the whole graph (chunked, fresh)
     colors1, U, _, ovf0 = _chunked_pass(
         ctx, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
-    colors, r, trace, tot, ovf = _fused_repair(
+    out = _fused_repair(
         ctx, ell, osrc, odst, pri, colors1, U, max_rounds, ovf0)
-    return colors[:n], r, trace, tot, ovf
+    return (out[0][:n],) + out[1:]
 
 
 @functools.partial(jax.jit, static_argnames=("ctx", "max_rounds"))
 def _rsoc_repair_loop(ell, osrc, odst, pri, colors, U, ctx, max_rounds):
     """Externally-seeded fused repair (full-width passes; no round 0)."""
-    n, n_pad, C, n_chunks, impl = ctx.unpack()
-    colors, r, trace, tot, ovf = _fused_repair(
-        ctx, ell, osrc, odst, pri, colors, U, max_rounds)
-    return colors, r, trace, tot, ovf
+    return _fused_repair(ctx, ell, osrc, odst, pri, colors, U, max_rounds)
 
 
 @functools.partial(jax.jit, static_argnames=("ctx", "max_rounds"))
@@ -485,7 +537,7 @@ def _jp_loop(src, dst, pri, n, C, max_rounds, impl=DEFAULT_FORBIDDEN_IMPL):
 # public API
 # --------------------------------------------------------------------------
 
-def _run_with_retry(run, C: int):
+def _run_with_retry(run, C: int, *, engine: str = ""):
     """Run ``run(C)``, doubling the color cap until it fits.
 
     ``run`` returns any tuple whose LAST element is the boolean overflow
@@ -493,25 +545,61 @@ def _run_with_retry(run, C: int):
     (from-scratch, frontier-compacted, JP, native distance-2, incremental)
     — they differ only in the closure they pass.  Returns
     (run output, final C, number of cap-doubling retries).
+
+    Observability rides here precisely because every engine funnels through:
+    each attempt is a ``solve`` phase on the current tracer (blocking on the
+    outputs so the wall time is real), and each doubling bumps the
+    ``engine.cap_retry{engine=...}`` counter.  With no tracer the only
+    addition over the pre-obs loop is one None check per attempt.
     """
     retries = 0
     while True:
-        out = run(C)
+        tracer = obs.current_tracer()
+        if tracer is None:
+            out = run(C)
+        else:
+            with tracer.phase("solve", C=int(C), attempt=retries):
+                out = jax.block_until_ready(run(C))
         if not bool(out[-1]):
             return out, C, retries
         C *= 2  # rare: color cap exceeded -> retry with doubled cap
         retries += 1
+        obs.metrics.counter("engine.cap_retry",
+                            engine=engine or "unknown").inc()
 
 
 def _prob_runner(loop, prob: ColoringProblem, n_chunks: int, max_rounds: int,
-                 impl: str):
+                 impl: str, trace: bool = False):
     """Adapt the standard from-scratch loop signature to ``_run_with_retry``."""
     def run(C):
         ctx = PassContext.for_problem(prob, n_chunks=n_chunks, C=C,
-                                      forbidden_impl=impl)
+                                      forbidden_impl=impl, trace=trace)
         return loop(prob.ell, prob.ovf_src, prob.ovf_dst, prob.pri,
                     ctx, max_rounds)
     return run
+
+
+def _loop_outputs(out, traced: bool):
+    """Split a retry-loop output tuple into (colors, r, trace, ftrace, tot).
+
+    The traced program returns six elements (frontier trace spliced before
+    the trailing (tot, ovf) pair), the plain program five; ftrace is None
+    when the loop did not collect one.
+    """
+    if traced:
+        colors, r, trace, ftrace, tot, _ = out
+        return colors, r, trace, ftrace, tot
+    colors, r, trace, tot, _ = out
+    return colors, r, trace, None, tot
+
+
+def _report_frontier(tracer, ftrace, r, cap=None):
+    """Hand a loop-carried frontier trace to the tracer, clipped like the
+    conflict trace is."""
+    if tracer is not None and ftrace is not None:
+        trimmed = np.asarray(ftrace).reshape(-1)[
+            :min(int(r), MAX_ROUNDS_TRACE)]
+        tracer.set_frontier_trace(trimmed, cap=cap)
 
 
 # --------------------------------------------------------------------------
@@ -523,19 +611,26 @@ def _prob_runner(loop, prob: ColoringProblem, n_chunks: int, max_rounds: int,
 def _rsoc_engine(g: CSRGraph, spec) -> ColoringResult:
     """RSOC (paper Alg. 3): fused detect-and-recolor, one pass per round."""
     impl = resolve_impl(spec.forbidden_impl)
-    prob = prepare(g, spec.seed, spec.n_chunks, spec.ell_cap, spec.C,
-                   spec.relabel)
-    (colors, r, trace, tot, _), final_C, retries = _run_with_retry(
-        _prob_runner(_rsoc_loop, prob, spec.n_chunks, spec.max_rounds, impl),
-        prob.C)
+    tracer = obs.current_tracer()
+    with obs.phase("prepare"):
+        prob = prepare(g, spec.seed, spec.n_chunks, spec.ell_cap, spec.C,
+                       spec.relabel)
+    out, final_C, retries = _run_with_retry(
+        _prob_runner(_rsoc_loop, prob, spec.n_chunks, spec.max_rounds, impl,
+                     trace=tracer is not None),
+        prob.C, engine="rsoc")
+    colors, r, trace, ftrace, tot = _loop_outputs(out, tracer is not None)
+    _report_frontier(tracer, ftrace, r)
+    conf, truncated = _trim_trace(trace, r)
     colors = _unpermute(colors, prob.perm, prob.n)
     return ColoringResult(colors=colors, n_rounds=int(r),
-                          conflicts_per_round=np.asarray(trace),
+                          conflicts_per_round=conf,
                           total_conflicts=int(tot),
                           n_colors=n_colors_used(colors),
                           overflow=retries > 0,
                           gather_passes=1 + int(r),
-                          final_C=final_C, retries=retries)
+                          final_C=final_C, retries=retries,
+                          trace_truncated=truncated)
 
 
 @registry.register_engine("cat", distance=1, mode="static",
@@ -543,19 +638,27 @@ def _rsoc_engine(g: CSRGraph, spec) -> ColoringResult:
 def _cat_engine(g: CSRGraph, spec) -> ColoringResult:
     """Catalyurek et al. (paper Alg. 2): two-phase rounds."""
     impl = resolve_impl(spec.forbidden_impl)
-    prob = prepare(g, spec.seed, spec.n_chunks, spec.ell_cap, spec.C,
-                   spec.relabel)
+    tracer = obs.current_tracer()
+    with obs.phase("prepare"):
+        prob = prepare(g, spec.seed, spec.n_chunks, spec.ell_cap, spec.C,
+                       spec.relabel)
     (colors, r, trace, tot, _), final_C, retries = _run_with_retry(
         _prob_runner(_cat_loop, prob, spec.n_chunks, spec.max_rounds, impl),
-        prob.C)
+        prob.C, engine="cat")
+    conf, truncated = _trim_trace(trace, r)
+    # CAT's frontier IS its conflict count: a round re-colors exactly the
+    # defect set U detected by the previous phase B, so no extra device
+    # collection is needed (the traced and untraced programs are identical).
+    _report_frontier(tracer, conf, r)
     colors = _unpermute(colors, prob.perm, prob.n)
     return ColoringResult(colors=colors, n_rounds=int(r),
-                          conflicts_per_round=np.asarray(trace),
+                          conflicts_per_round=conf,
                           total_conflicts=int(tot),
                           n_colors=n_colors_used(colors),
                           overflow=retries > 0,
                           gather_passes=2 * (1 + int(r)),
-                          final_C=final_C, retries=retries)
+                          final_C=final_C, retries=retries,
+                          trace_truncated=truncated)
 
 
 @registry.register_engine("gm", distance=1, mode="static",
@@ -564,34 +667,38 @@ def _gm_engine(g: CSRGraph, spec) -> ColoringResult:
     """Gebremedhin-Manne: speculate, detect, serial repair (one round —
     ``spec.max_rounds`` is inert for this engine)."""
     impl = resolve_impl(spec.forbidden_impl)
-    prob = prepare(g, spec.seed, spec.n_chunks, spec.ell_cap, spec.C,
-                   spec.relabel)
+    with obs.phase("prepare"):
+        prob = prepare(g, spec.seed, spec.n_chunks, spec.ell_cap, spec.C,
+                       spec.relabel)
     ctx = PassContext.for_problem(prob, n_chunks=spec.n_chunks,
                                   forbidden_impl=impl)
-    colors, defect, ovf = _gm_round0(prob.ell, prob.ovf_src, prob.ovf_dst,
-                                     prob.pri, ctx)
+    with obs.phase("solve", C=prob.C):
+        colors, defect, ovf = jax.block_until_ready(
+            _gm_round0(prob.ell, prob.ovf_src, prob.ovf_dst, prob.pri, ctx))
     colors_np = np.asarray(colors[:prob.n]).copy()
     defect_np = np.asarray(defect[:prob.n])
     # serial repair in the *relabeled* space: rebuild neighbor lists from ELL
     # plus the COO overflow side-channel (capped-width hub rows spill there —
     # skipping it produced improper repairs on power-law graphs).
-    ell_np = np.asarray(prob.ell)
-    osrc_np = np.asarray(prob.ovf_src)
-    odst_np = np.asarray(prob.ovf_dst)
-    order = np.argsort(osrc_np, kind="stable")
-    osrc_sorted, odst_sorted = osrc_np[order], odst_np[order]
-    for v in np.nonzero(defect_np)[0]:
-        nb = ell_np[v]
-        nb = nb[(nb >= 0) & (nb < prob.n)]
-        if len(osrc_sorted):
-            lo, hi = np.searchsorted(osrc_sorted, [v, v + 1])
-            nb = np.concatenate([nb, odst_sorted[lo:hi]])
-        nc = colors_np[nb]
-        used = set(int(x) for x in nc if x >= 0)
-        c = 0
-        while c in used:
-            c += 1
-        colors_np[v] = c
+    with obs.phase("serial_repair",
+                         n_defects=int(defect_np.sum())):
+        ell_np = np.asarray(prob.ell)
+        osrc_np = np.asarray(prob.ovf_src)
+        odst_np = np.asarray(prob.ovf_dst)
+        order = np.argsort(osrc_np, kind="stable")
+        osrc_sorted, odst_sorted = osrc_np[order], odst_np[order]
+        for v in np.nonzero(defect_np)[0]:
+            nb = ell_np[v]
+            nb = nb[(nb >= 0) & (nb < prob.n)]
+            if len(osrc_sorted):
+                lo, hi = np.searchsorted(osrc_sorted, [v, v + 1])
+                nb = np.concatenate([nb, odst_sorted[lo:hi]])
+            nc = colors_np[nb]
+            used = set(int(x) for x in nc if x >= 0)
+            c = 0
+            while c in used:
+                c += 1
+            colors_np[v] = c
     tot = int(defect_np.sum())
     colors_out = _unpermute(colors_np, prob.perm, prob.n)
     return ColoringResult(colors=colors_out, n_rounds=1,
@@ -609,13 +716,15 @@ def _jp_engine(g: CSRGraph, spec) -> ColoringResult:
     fields of the spec — n_chunks, ell_cap, relabel — are inert here)."""
     impl = resolve_impl(spec.forbidden_impl)
     n = g.n_vertices
-    e = to_edge_list(g)
-    src, dst = jnp.asarray(e[:, 0], jnp.int32), jnp.asarray(e[:, 1], jnp.int32)
-    pri = jnp.asarray(np.random.default_rng(spec.seed).permutation(n)
-                      .astype(np.int32))
+    with obs.phase("prepare"):
+        e = to_edge_list(g)
+        src = jnp.asarray(e[:, 0], jnp.int32)
+        dst = jnp.asarray(e[:, 1], jnp.int32)
+        pri = jnp.asarray(np.random.default_rng(spec.seed).permutation(n)
+                          .astype(np.int32))
     (colors, r, _), Cv, retries = _run_with_retry(
         lambda Cv: _jp_loop(src, dst, pri, n, Cv, spec.max_rounds, impl),
-        _pick_C(g, spec.C))
+        _pick_C(g, spec.C), engine="jp")
     colors = np.asarray(colors)
     if (colors < 0).any():
         # never silent: a JP round bound that is too small used to return a

@@ -42,6 +42,11 @@ class PassContext:
     ``C``       color cap (doubles on overflow via ``_run_with_retry``)
     ``n_chunks`` sequential chunks per pass (1/threads of the paper)
     ``forbidden_impl`` forbidden-set representation ("bitset" | "dense")
+    ``trace``   collect per-round trace extras (frontier sizes) in the loop
+                carry (DESIGN.md §12).  Static on purpose: ``trace=False``
+                compiles the exact pre-obs program — zero extra device work
+                or allocations when off — while ``trace=True`` is a separate
+                jit-cache entry that pays for what it measures.
     """
 
     n: int
@@ -49,6 +54,7 @@ class PassContext:
     C: int
     n_chunks: int
     forbidden_impl: str = DEFAULT_FORBIDDEN_IMPL
+    trace: bool = False
 
     def __post_init__(self):
         if self.n_chunks < 1:
@@ -62,14 +68,16 @@ class PassContext:
 
     @classmethod
     def for_problem(cls, prob, *, n_chunks: int, C: Optional[int] = None,
-                    forbidden_impl: Optional[str] = None) -> "PassContext":
+                    forbidden_impl: Optional[str] = None,
+                    trace: bool = False) -> "PassContext":
         """Context for a prepared ``ColoringProblem`` (the standard builder:
         every engine derives its contexts here or via ``with_C``).  The
         problem does not record a chunking, so ``n_chunks`` is explicit."""
         return cls(n=prob.n, n_pad=prob.n_pad,
                    C=int(C if C is not None else prob.C),
                    n_chunks=int(n_chunks),
-                   forbidden_impl=resolve_impl(forbidden_impl))
+                   forbidden_impl=resolve_impl(forbidden_impl),
+                   trace=bool(trace))
 
     def with_C(self, C: int) -> "PassContext":
         """Same context at a (doubled) color cap — the retry-loop builder."""
@@ -77,6 +85,9 @@ class PassContext:
 
     def unpack(self) -> tuple[int, int, int, int, str]:
         """Positional view ``(n, n_pad, C, n_chunks, forbidden_impl)`` for
-        the pass bodies.  The order is defined HERE and nowhere else."""
+        the pass bodies.  The order is defined HERE and nowhere else.
+        ``trace`` is deliberately NOT part of the positional view — the few
+        loop drivers that collect trace extras read ``ctx.trace`` directly,
+        the pass bodies never need it."""
         return (self.n, self.n_pad, self.C, self.n_chunks,
                 self.forbidden_impl)

@@ -50,6 +50,7 @@ from repro.graphs.csr import CSRGraph, power_graph, to_edge_list
 from repro.core import coloring as col
 from repro.core import frontier as fr
 from repro.core.context import PassContext
+from repro import obs
 
 
 # --------------------------------------------------------------------------
@@ -225,9 +226,10 @@ def _d2_loop(ell, pri, rows_mask, ctx, cap, max_rounds):
         return _d2_chunked_pass(ctx, ell, pri, rows_mask, colors, U,
                                 force, detect=True)
 
-    colors, r, trace, tot, ovf = fr._compact_repair(
+    # arity follows ctx.trace: the compacted repair splices a frontier
+    # trace before the (tot, ovf) tail when tracing (see frontier.py)
+    return fr._compact_repair(
         ctx, cap, pass_small, pass_big, colors1, U, max_rounds, ovf0)
-    return colors, r, trace, tot, ovf
 
 
 # --------------------------------------------------------------------------
@@ -260,22 +262,24 @@ def _prepare_native(g: CSRGraph, seed: int, n_chunks: int, C: Optional[int],
 
 
 def _run_d2_with_retry(prob: col.ColoringProblem, rows_mask, n_chunks: int,
-                       cap: int, max_rounds: int, impl: str):
+                       cap: int, max_rounds: int, impl: str,
+                       engine: str = "rsoc_d2", trace: bool = False):
     def run(C):
         ctx = PassContext.for_problem(prob, n_chunks=n_chunks, C=C,
-                                      forbidden_impl=impl)
+                                      forbidden_impl=impl, trace=trace)
         return _d2_loop(prob.ell, prob.pri, rows_mask, ctx, cap,
                         max_rounds)
-    return col._run_with_retry(run, prob.C)
+    return col._run_with_retry(run, prob.C, engine=engine)
 
 
-def _d2_result(colors, r, trace, tot, final_C, retries) -> col.ColoringResult:
+def _d2_result(colors, r, trace, tot, final_C, retries,
+               truncated: bool = False) -> col.ColoringResult:
     return col.ColoringResult(
         colors=colors, n_rounds=int(r),
         conflicts_per_round=np.asarray(trace), total_conflicts=int(tot),
         n_colors=col.n_colors_used(colors), overflow=retries > 0,
         gather_passes=1 + int(r), final_C=final_C, retries=retries,
-        distance=2)
+        distance=2, trace_truncated=truncated)
 
 
 @registry.register_engine("rsoc", distance=2, mode="static",
@@ -283,14 +287,20 @@ def _d2_result(colors, r, trace, tot, final_C, retries) -> col.ColoringResult:
 def _distance2_engine(g: CSRGraph, spec) -> col.ColoringResult:
     """Native distance-2 RSOC: fused two-hop gather, G² never materialized."""
     impl = col._resolve_impl(spec.forbidden_impl)
-    prob = _prepare_native(g, spec.seed, spec.n_chunks, spec.C, spec.relabel,
-                           spec.ell_cap)
+    tracer = obs.current_tracer()
+    with obs.phase("prepare"):
+        prob = _prepare_native(g, spec.seed, spec.n_chunks, spec.C,
+                               spec.relabel, spec.ell_cap)
     cap = fr.frontier_cap(prob.n_pad, spec.n_chunks, spec.frontier_frac)
     rows_mask = jnp.arange(prob.n_pad) < prob.n
-    (colors, r, trace, tot, _), final_C, retries = _run_d2_with_retry(
-        prob, rows_mask, spec.n_chunks, cap, spec.max_rounds, impl)
+    out, final_C, retries = _run_d2_with_retry(
+        prob, rows_mask, spec.n_chunks, cap, spec.max_rounds, impl,
+        engine="rsoc_d2", trace=tracer is not None)
+    colors, r, trace, ftrace, tot = col._loop_outputs(out, tracer is not None)
+    col._report_frontier(tracer, ftrace, r, cap=cap)
+    conf, truncated = col._trim_trace(trace, r)
     colors = col._unpermute(colors, prob.perm, prob.n)
-    return _d2_result(colors, r, trace, tot, final_C, retries)
+    return _d2_result(colors, r, conf, tot, final_C, retries, truncated)
 
 
 @registry.register_engine("rsoc", distance=2, mode="partial",
@@ -309,15 +319,21 @@ def _bipartite_partial_engine(g: CSRGraph, spec) -> col.ColoringResult:
     if n_left is None or not 0 < n_left <= g.n_vertices:
         raise ValueError(f"n_left {n_left} out of range for n={g.n_vertices}")
     impl = col._resolve_impl(spec.forbidden_impl)
-    prob = _prepare_native(g, spec.seed, spec.n_chunks, spec.C, spec.relabel,
-                           spec.ell_cap)
+    tracer = obs.current_tracer()
+    with obs.phase("prepare"):
+        prob = _prepare_native(g, spec.seed, spec.n_chunks, spec.C,
+                               spec.relabel, spec.ell_cap)
     cap = fr.frontier_cap(prob.n_pad, spec.n_chunks, spec.frontier_frac)
     mask_np = np.zeros(prob.n_pad, dtype=bool)
     mask_np[prob.perm[:n_left]] = True        # left side, relabeled space
-    (colors, r, trace, tot, _), final_C, retries = _run_d2_with_retry(
-        prob, jnp.asarray(mask_np), spec.n_chunks, cap, spec.max_rounds, impl)
+    out, final_C, retries = _run_d2_with_retry(
+        prob, jnp.asarray(mask_np), spec.n_chunks, cap, spec.max_rounds, impl,
+        engine="rsoc_d2_partial", trace=tracer is not None)
+    colors, r, trace, ftrace, tot = col._loop_outputs(out, tracer is not None)
+    col._report_frontier(tracer, ftrace, r, cap=cap)
+    conf, truncated = col._trim_trace(trace, r)
     colors = col._unpermute(colors, prob.perm, prob.n)[:n_left]
-    return _d2_result(colors, r, trace, tot, final_C, retries)
+    return _d2_result(colors, r, conf, tot, final_C, retries, truncated)
 
 
 def color_distance2(g: CSRGraph, seed: int = 0, C: Optional[int] = None,

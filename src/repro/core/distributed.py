@@ -39,6 +39,7 @@ from repro.graphs.csr import CSRGraph, FILL, to_ell
 from repro.core import coloring as col
 from repro.core.context import PassContext
 from repro.core.partition import Partition, HaloPlan, block_partition, build_halo
+from repro import obs
 
 MAX_ROUNDS_TRACE = col.MAX_ROUNDS_TRACE
 
@@ -313,16 +314,17 @@ def _color_distributed(g: CSRGraph, mesh: Mesh, axis: str = "data",
     """Run distributed coloring on real devices (tests use host platforms)."""
     axes = tuple(axis.split(","))
     D = int(np.prod([mesh.shape[a] for a in axes]))
-    part = block_partition(g, D, seed)
-    gg = part.graph
-    W = max(1, gg.max_degree)
-    n_loc = -(-part.n_pad // D)
-    n_loc = -(-n_loc // n_chunks) * n_chunks
-    n_pad = n_loc * D
-    ell = to_ell(gg, max_degree=W, pad_vertices_to=n_pad)
-    rng = np.random.default_rng(seed + 1)
-    pri = np.full(n_pad, -1, np.int32)
-    pri[:part.n] = rng.permutation(part.n).astype(np.int32)
+    with obs.phase("prepare"):
+        part = block_partition(g, D, seed)
+        gg = part.graph
+        W = max(1, gg.max_degree)
+        n_loc = -(-part.n_pad // D)
+        n_loc = -(-n_loc // n_chunks) * n_chunks
+        n_pad = n_loc * D
+        ell = to_ell(gg, max_degree=W, pad_vertices_to=n_pad)
+        rng = np.random.default_rng(seed + 1)
+        pri = np.full(n_pad, -1, np.int32)
+        pri[:part.n] = rng.permutation(part.n).astype(np.int32)
     ctx = PassContext(n=part.n, n_pad=n_pad,
                       C=C or col._pick_C(gg, None), n_chunks=n_chunks,
                       forbidden_impl=col._resolve_impl(forbidden_impl))
@@ -331,15 +333,17 @@ def _color_distributed(g: CSRGraph, mesh: Mesh, axis: str = "data",
     ell_sharding = NamedSharding(mesh, P(*((axes if len(axes) > 1 else (axes[0],)) + (None,))))
     ellj = jax.device_put(jnp.asarray(ell), ell_sharding)
     prij = jax.device_put(jnp.asarray(pri), NamedSharding(mesh, P()))
-    colors, r, trace, tot = fn(ellj, prij)
+    with obs.phase("solve", C=ctx.C, devices=D):
+        colors, r, trace, tot = jax.block_until_ready(fn(ellj, prij))
+    conf, truncated = col._trim_trace(trace, r)
     # back to original ids: perm maps old->new, colors_old[i] = colors_new[perm[i]]
     colors = np.asarray(colors)[part.perm]
     return col.ColoringResult(
-        colors=colors, n_rounds=int(r), conflicts_per_round=np.asarray(trace),
+        colors=colors, n_rounds=int(r), conflicts_per_round=conf,
         total_conflicts=int(tot), n_colors=col.n_colors_used(colors),
         overflow=False,
         gather_passes=(1 + int(r)) * (1 if algorithm == "rsoc" else 2),
-        final_C=ctx.C, retries=0, distance=1)
+        final_C=ctx.C, retries=0, distance=1, trace_truncated=truncated)
 
 
 def _distributed_engine(algorithm: str):

@@ -37,6 +37,7 @@ from repro.graphs.csr import CSRGraph
 from repro.core import bitset
 from repro.core import coloring as col
 from repro.core.context import PassContext
+from repro import obs
 
 MAX_ROUNDS_TRACE = col.MAX_ROUNDS_TRACE
 
@@ -140,6 +141,11 @@ def _compact_repair(ctx, cap, pass_small, pass_big, colors, U,
     idx, idx_valid)`` recolors the ≤ cap compacted frontier rows,
     ``pass_big(colors, U, force)`` is the full-width fallback; both return
     (colors, recolored_mask, n_defects, cap_overflowed).
+
+    Under the static ``ctx.trace`` flag the return grows a per-round |U|
+    trace (same splice-before-the-tail convention as
+    ``coloring._fused_repair``); the frontier count is free here — every
+    round already computes it to pick the small-vs-big pass.
     """
     n, n_pad, C, n_chunks, impl = ctx.unpack()
 
@@ -148,11 +154,17 @@ def _compact_repair(ctx, cap, pass_small, pass_big, colors, U,
         return idx, idx < n_pad
 
     def cond(s):
-        return (s[4] > 0) & (s[3] < max_rounds)
+        # state tail fixed at (..., r, last, tot, ovf)
+        return (s[-3] > 0) & (s[-4] < max_rounds)
 
     def body(s):
-        colors, U, trace, r, last, tot, ovf = s
+        if ctx.trace:
+            colors, U, trace, ftrace, r, last, tot, ovf = s
+        else:
+            colors, U, trace, r, last, tot, ovf = s
         count = U.sum(dtype=jnp.int32)
+        if ctx.trace:
+            ftrace = ftrace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(count)
         n_forced = (U & (colors < 0)).sum(dtype=jnp.int32)
 
         def small(_):
@@ -168,13 +180,19 @@ def _compact_repair(ctx, cap, pass_small, pass_big, colors, U,
         trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(n_def)
         # forced (uncolored-seed) work is speculative: keep the loop alive
         # so the next pass verifies it (see coloring._fused_repair)
-        return (colors2, recolored, trace, r + 1, n_def + n_forced,
-                tot + n_def, ovf | ovf2)
+        head = ((colors2, recolored, trace, ftrace) if ctx.trace
+                else (colors2, recolored, trace))
+        return head + (r + 1, n_def + n_forced, tot + n_def, ovf | ovf2)
 
     trace = jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32)
-    s = (colors, U, trace, jnp.int32(0), jnp.int32(1), jnp.int32(0),
-         jnp.bool_(ovf0))
-    colors, U, trace, r, _, tot, ovf = jax.lax.while_loop(cond, body, s)
+    head = ((colors, U, trace, jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32))
+            if ctx.trace else (colors, U, trace))
+    s = head + (jnp.int32(0), jnp.int32(1), jnp.int32(0), jnp.bool_(ovf0))
+    out = jax.lax.while_loop(cond, body, s)
+    if ctx.trace:
+        colors, U, trace, ftrace, r, _, tot, ovf = out
+        return colors, r, trace, ftrace, tot, ovf
+    colors, U, trace, r, _, tot, ovf = out
     return colors, r, trace, tot, ovf
 
 
@@ -189,9 +207,9 @@ def _rsoc_compact_loop(ell, osrc, odst, pri, ctx, cap, max_rounds):
     colors1, U, _, ovf0 = col._chunked_pass(
         ctx, ell, osrc, odst, pri, colors0, zeros, valid, detect=False)
     pass_small, pass_big = _d1_passes(ctx, ell, osrc, odst, pri)
-    colors, r, trace, tot, ovf = _compact_repair(
+    out = _compact_repair(
         ctx, cap, pass_small, pass_big, colors1, U, max_rounds, ovf0)
-    return colors[:n], r, trace, tot, ovf
+    return (out[0][:n],) + out[1:]
 
 
 @functools.partial(jax.jit, static_argnames=("ctx", "cap", "max_rounds"))
@@ -209,23 +227,30 @@ def _repair_compact_loop(ell, osrc, odst, pri, colors, U, ctx, cap,
 def _rsoc_compact_engine(g: CSRGraph, spec) -> col.ColoringResult:
     """RSOC with frontier compaction after round 0."""
     impl = col._resolve_impl(spec.forbidden_impl)
-    prob = col.prepare(g, spec.seed, spec.n_chunks, spec.ell_cap, spec.C,
-                       spec.relabel)
+    tracer = obs.current_tracer()
+    with obs.phase("prepare"):
+        prob = col.prepare(g, spec.seed, spec.n_chunks, spec.ell_cap, spec.C,
+                           spec.relabel)
     cap = frontier_cap(prob.n_pad, spec.n_chunks, spec.frontier_frac)
 
     def run(C_):
         ctx = PassContext.for_problem(prob, n_chunks=spec.n_chunks, C=C_,
-                                      forbidden_impl=impl)
+                                      forbidden_impl=impl,
+                                      trace=tracer is not None)
         return _rsoc_compact_loop(prob.ell, prob.ovf_src, prob.ovf_dst,
                                   prob.pri, ctx, cap, spec.max_rounds)
 
-    (colors, r, trace, tot, _), C_, retries = col._run_with_retry(run, prob.C)
+    out, C_, retries = col._run_with_retry(run, prob.C,
+                                           engine="rsoc_compact")
+    colors, r, trace, ftrace, tot = col._loop_outputs(out, tracer is not None)
+    col._report_frontier(tracer, ftrace, r, cap=cap)
+    conf, truncated = col._trim_trace(trace, r)
     colors = col._unpermute(colors, prob.perm, prob.n)
     return col.ColoringResult(
-        colors=colors, n_rounds=int(r), conflicts_per_round=np.asarray(trace),
+        colors=colors, n_rounds=int(r), conflicts_per_round=conf,
         total_conflicts=int(tot), n_colors=col.n_colors_used(colors),
         overflow=retries > 0, gather_passes=1 + int(r),
-        final_C=C_, retries=retries)
+        final_C=C_, retries=retries, trace_truncated=truncated)
 
 
 def color_rsoc_compact(g: CSRGraph, seed: int = 0, C: Optional[int] = None,

@@ -30,6 +30,7 @@ from repro.core import frontier
 from repro.core.context import PassContext
 from repro.dynamic import delta
 from repro.graphs.csr import CSRGraph, FILL
+from repro import obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,10 +92,11 @@ def dynamic_state(g: CSRGraph, seed: int = 0, n_chunks: int = 16,
     land in ELL; ``ovf_cap`` sizes the spill buffer (grows on demand).
     """
     impl = col._resolve_impl(forbidden_impl)
-    prob = col.prepare(g, seed, n_chunks, ell_cap, C)
+    with obs.phase("prepare"):
+        prob = col.prepare(g, seed, n_chunks, ell_cap, C)
     (colors_n, r, trace, tot, _), final_C, retries = col._run_with_retry(
         col._prob_runner(col._rsoc_loop, prob, n_chunks, max_rounds, impl),
-        prob.C)
+        prob.C, engine="incremental")
 
     ell_np = np.asarray(prob.ell)
     if ell_slack > 0:
@@ -169,7 +171,7 @@ def recolor_incremental(state: DynamicColoringState,
             state.frontier_cap, max_rounds)
 
     (colors2, r, trace, tot, _), C, retries = col._run_with_retry(
-        run, state.C)
+        run, state.C, engine="incremental")
     passes = int(r)
     return dataclasses.replace(
         state, ell=ell, ovf_src=osrc, ovf_dst=odst, colors_dev=colors2,

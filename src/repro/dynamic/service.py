@@ -14,6 +14,7 @@ last stepped version, never a half-applied batch.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import numpy as np
@@ -24,6 +25,7 @@ from repro.dynamic import delta
 from repro.dynamic.incremental import (DynamicColoringState, _check_edges,
                                        recolor_incremental)
 from repro.graphs.csr import CSRGraph, to_edge_list
+from repro.obs import metrics as obs_metrics
 
 
 @dataclasses.dataclass
@@ -104,13 +106,26 @@ class ColoringService:
         names = [name] if name is not None else self.graphs()
         out = {}
         for nm in names:
+            t0 = time.perf_counter()
             st = self._state(nm)
+            n_batches = len(self._pending[nm])
             for batch in self._pending[nm]:
                 st = recolor_incremental(st, batch.inserts, batch.deletes)
             self._pending[nm] = []
             self._states[nm] = st
-            out[nm] = st.summary()
+            out[nm] = st.summary()   # hosts the colors => blocks on device
+            # per-tenant step latency (p50/p99 via step_latency(name));
+            # zero-batch steps are ~free and would drown the percentiles
+            if n_batches:
+                obs_metrics.histogram("service.step_ms", graph=nm).observe(
+                    (time.perf_counter() - t0) * 1e3)
         return out
+
+    def step_latency(self, name: str) -> dict:
+        """Latency summary of this tenant's non-empty ``step`` calls:
+        {count, mean, max, p50, p99} in milliseconds (process-local)."""
+        self._state(name)
+        return obs_metrics.histogram("service.step_ms", graph=name).summary()
 
     # -- queries (always reflect the last stepped version) ------------------
 
@@ -151,7 +166,10 @@ class ColoringService:
         key = (name, kind)
         hit = self._memo.get(key)
         if hit is not None and hit[0] == st.version:
+            obs_metrics.counter("service.memo", kind=kind,
+                                outcome="hit").inc()
             return hit[1]
+        obs_metrics.counter("service.memo", kind=kind, outcome="miss").inc()
         art = build(st)
         self._memo[key] = (st.version, art)
         return art

@@ -14,6 +14,7 @@ must agree bit-for-bit (tests/test_kernels.py).
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,7 @@ from repro.kernels.detect_recolor import detect_recolor as _dr_pallas
 from repro.kernels.twohop import twohop_detect_recolor as _twohop_pallas
 from repro.kernels.ell_spmm import ell_spmm as _spmm_pallas
 from repro.kernels.flash_attention import flash_attention as _fa_pallas
+from repro.obs import metrics as obs_metrics
 
 
 def default_backend() -> str:
@@ -34,9 +36,37 @@ def _resolve(backend: str) -> str:
     return default_backend() if backend == "auto" else backend
 
 
+def _dispatched(kernel: str, backend: str) -> None:
+    """Count every dispatch decision: ``kernels.dispatch{kernel=,backend=}``
+    tells a perf report which path actually ran (DESIGN.md §12)."""
+    obs_metrics.counter("kernels.dispatch", kernel=kernel,
+                        backend=backend).inc()
+
+
+_fallback_warned: set = set()
+
+
+def _vmem_fallback(kernel: str, detail: str) -> None:
+    """A requested Pallas kernel fell back to the jnp reference because its
+    working set would not stay VMEM-resident.  Used to be silent — now it
+    warns once per process per kernel (naming the overflowing shape) and
+    counts every occurrence in ``kernels.fallback{kernel=,reason=vmem}``."""
+    obs_metrics.counter("kernels.fallback", kernel=kernel,
+                        reason="vmem").inc()
+    if kernel not in _fallback_warned:
+        _fallback_warned.add(kernel)
+        warnings.warn(
+            f"{kernel}: Pallas kernel fell back to the jnp reference — "
+            f"{detail}. Counted in obs.metrics "
+            f"'kernels.fallback{{kernel={kernel},reason=vmem}}'; this "
+            f"warning fires once per process per kernel.",
+            RuntimeWarning, stacklevel=3)
+
+
 def firstfit(ell, colors, C: int = 64, backend: str = "auto",
              impl: str = "bitset", **kw):
     b = _resolve(backend)
+    _dispatched("firstfit", b)
     if b == "jnp":
         return ref.firstfit_ref(ell, colors, C, impl=impl)
     interp = b == "pallas_interpret"
@@ -47,6 +77,7 @@ def firstfit(ell, colors, C: int = 64, backend: str = "auto",
 def detect_recolor(ell, colors, pri, U_rows, row_start: int, C: int = 64,
                    backend: str = "auto", impl: str = "bitset", **kw):
     b = _resolve(backend)
+    _dispatched("detect_recolor", b)
     if b == "jnp":
         return ref.detect_recolor_ref(ell, colors, pri, row_start, U_rows, C,
                                       impl=impl)
@@ -62,7 +93,13 @@ def twohop(ell_rows, ell_all, colors, pri, U_rows, row_start: int,
     would not fit VMEM (n_all * W * 4 > ~8MB)."""
     b = _resolve(backend)
     if b == "pallas" and ell_all.size * 4 > 8 * 2**20:
+        _vmem_fallback(
+            "twohop",
+            f"full ELL table {ell_all.shape[0]}x{ell_all.shape[1]} int32 = "
+            f"{ell_all.size * 4 / 2**20:.1f} MB exceeds the ~8 MB VMEM "
+            f"residency bound")
         b = "jnp"
+    _dispatched("twohop", b)
     if b == "jnp":
         return ref.twohop_ref(ell_rows, ell_all, colors, pri, row_start,
                               U_rows, C, impl=impl)
@@ -77,7 +114,13 @@ def ell_aggregate(ell, feats, op: str = "sum", backend: str = "auto", **kw):
     b = _resolve(backend)
     n = feats.shape[0]
     if b == "pallas" and n * 128 * feats.dtype.itemsize > 8 * 2**20:
+        _vmem_fallback(
+            "ell_aggregate",
+            f"feature panel {n}x128 ({feats.dtype}) = "
+            f"{n * 128 * feats.dtype.itemsize / 2**20:.1f} MB exceeds the "
+            f"~8 MB VMEM residency bound")
         b = "jnp"
+    _dispatched("ell_aggregate", b)
     if b == "jnp":
         return ref.ell_spmm_ref(ell, feats, op)
     interp = b == "pallas_interpret"
@@ -86,6 +129,7 @@ def ell_aggregate(ell, feats, op: str = "sum", backend: str = "auto", **kw):
 
 def attention(q, k, v, *, causal: bool = True, backend: str = "auto", **kw):
     b = _resolve(backend)
+    _dispatched("attention", b)
     if b == "jnp":
         return ref.flash_attention_ref(q, k, v, causal=causal)
     interp = b == "pallas_interpret"
