@@ -4,21 +4,33 @@
 #   make test         tier-1 test suite (the gate every PR must keep green;
 #                     includes the public-API surface snapshot,
 #                     tests/test_api_surface.py vs tests/api_surface.json)
-#   make bench-smoke  tiny-graph run of every benchmark section — catches
-#                     import rot and shape bugs in minutes, not numbers;
-#                     writes BENCH_<section>.json (uploaded as CI artifacts)
+#   make bench-smoke  SCALE-parameterized run of every benchmark section
+#                     (default tiny) — catches import rot and shape bugs in
+#                     minutes, not numbers; writes BENCH_<section>.json
+#                     (uploaded as CI artifacts).  CI runs it twice: tiny,
+#                     then SCALE=small so the paged-twohop acceptance row
+#                     (table > 8 MB, kernel_fallbacks=0) is exercised on
+#                     every push.
 #   make bench        paper-scale benchmark run (small suite)
+#   make bench-report roofline achieved-vs-peak table from the JSON dumps
 
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test bench-smoke bench
+SCALE ?= tiny
+PEAK_GBS ?= 50
+
+.PHONY: test bench-smoke bench bench-report
 
 test:
 	python -m pytest -x -q
 
 bench-smoke:
-	python -m benchmarks.run --scale=tiny --json
+	python -m benchmarks.run --scale=$(SCALE) --json
 
 bench:
 	python -m benchmarks.run --scale=small
+
+bench-report:
+	python -m benchmarks.roofline_report --bench BENCH_*.json \
+	  --peak-gbs $(PEAK_GBS) | tee roofline_bench.md

@@ -11,13 +11,24 @@ from __future__ import annotations
 from benchmarks.common import Csv, forb_ws_mb, suite
 from repro import api
 
+# Scale-aware parallelism sweep: the sweep must track graph size or the
+# "wave width" n/n_chunks it simulates collapses to trivial chunks — at
+# medium the interesting regime is the wide end (few chunks, huge waves),
+# while a fixed 7-point sweep over every graph would dominate the section's
+# wall time without adding resolution.
+CHUNK_SWEEP = {
+    "tiny": (1, 2, 4, 8, 16, 32, 64),
+    "small": (1, 2, 4, 8, 16, 32, 64),
+    "medium": (1, 4, 16, 64, 256),
+}
+
 
 def main(scale: str = "small") -> None:
     graphs = suite(scale)
     csv = Csv(["graph", "algo", "n_chunks", "sim_parallelism", "conflicts",
                "rounds", "colors", "ws_mb"])
     for gname, g in graphs.items():
-        for n_chunks in (1, 2, 4, 8, 16, 32, 64):
+        for n_chunks in CHUNK_SWEEP.get(scale, CHUNK_SWEEP["small"]):
             for algo in ("cat", "rsoc"):
                 res = api.color(g, algorithm=algo, seed=1,
                                 n_chunks=n_chunks)

@@ -22,6 +22,10 @@ from repro.core import coloring as col
 
 CAPS = (32, 64, 128, 256)
 ROWS = {"tiny": 1024, "small": 8192, "medium": 32768}
+# medium additionally sweeps the C=512 cap the distance-2 engine actually
+# picks on dense meshes (distance2._pick_C_d2 tops out at 512) — the shrink
+# claim must hold where the working set is largest
+EXTRA_CAPS = {"medium": (512,)}
 
 
 @functools.partial(jax.jit, static_argnums=1)
@@ -40,8 +44,9 @@ def main(scale: str = "small") -> None:
     rng = np.random.default_rng(0)
     csv = Csv(["graph", "algo", "C", "rows", "W", "ms", "ws_mb",
                "ws_reduction_x", "mex_match"])
+    caps = CAPS + EXTRA_CAPS.get(scale, ())
     for mode in ("random", "overflow"):
-        for C in CAPS:
+        for C in caps:
             if mode == "random":
                 Wm = W
                 panel = rng.integers(-1, 300, size=(rows, Wm)).astype(

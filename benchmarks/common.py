@@ -34,13 +34,23 @@ def suite(scale: str = "small"):
 
 
 def time_fn(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
-    """Median wall time of fn(*args) in seconds (jit warmup excluded)."""
+    """Median wall time of fn(*args) in seconds (jit warmup excluded).
+
+    Both warmup and timed outputs go through ``jax.block_until_ready``:
+    under JAX's async dispatch a bare fn() returns at *launch*, so timing
+    without blocking measures dispatch latency, not compute — and an
+    unblocked warmup leaks the first run's compute into the first timed
+    repeat.  Host-side outputs (numpy, dataclasses) pass through untouched.
+    (Semantics change noted in DESIGN.md §9: ms columns are end-to-end
+    compute, comparable across backends.)
+    """
+    import jax
     for _ in range(warmup):
-        fn(*args, **kw)
+        jax.block_until_ready(fn(*args, **kw))
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        out = fn(*args, **kw)
+        out = jax.block_until_ready(fn(*args, **kw))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts)), out
 

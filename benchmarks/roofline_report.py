@@ -59,19 +59,31 @@ def table(rows, mesh="16x16"):
 
 
 def _achieved_bytes_s(r):
-    """Lower bound on achieved memory bandwidth of one coloring row: the
-    forbidden working set is streamed at least once per gather pass."""
-    ms, ws_mb = r.get("ms"), r.get("ws_mb")
-    if not ms or not ws_mb:
+    """Achieved memory bandwidth of one row.  Kernel rows carry an explicit
+    ``bytes_moved`` (exact bytes the kernel streamed: paged table × passes
+    + gather traffic) — preferred when present.  Engine rows fall back to
+    the lower bound: the forbidden working set streamed once per gather
+    pass."""
+    ms = r.get("ms")
+    if not ms:
+        return None
+    bytes_moved = r.get("bytes_moved")
+    if bytes_moved:
+        return bytes_moved / (ms / 1e3)
+    ws_mb = r.get("ws_mb")
+    if not ws_mb:
         return None
     passes = r.get("gather_passes") or 1
     return ws_mb * 2**20 * max(passes, 1) / (ms / 1e3)
 
 
 def bench_table(paths, peak_gbs: float):
-    """Per-(section, graph, algo) achieved-vs-peak bandwidth table from
-    BENCH_*.json dumps, with null-safe backfill of the obs columns
-    (n_rounds / retries / kernel_fallbacks) for pre-obs files."""
+    """Per-(section, graph, algo|kernel) achieved-vs-peak bandwidth table
+    from BENCH_*.json dumps.  Rows without the timing schema (no ``ms``, or
+    no algo/kernel/variant identity — e.g. every row of a non-coloring
+    section like lm_step) are SKIPPED, never backfilled into garbage lines;
+    only the obs columns (n_rounds / retries / kernel_fallbacks) backfill
+    null-safely as "-" for pre-obs dumps."""
     out = ["| section | graph | algo | ms | rounds | retries | fallbacks | "
            "achieved B/s | peak frac |",
            "|---|---|---|---|---|---|---|---|---|"]
@@ -80,8 +92,9 @@ def bench_table(paths, peak_gbs: float):
         with open(path) as f:
             dump = json.load(f)
         for r in dump.get("rows", []):
-            if r.get("ms") is None:
-                continue
+            algo = r.get("kernel") or r.get("algo") or r.get("variant")
+            if not isinstance(r.get("ms"), (int, float)) or algo is None:
+                continue                      # row is not a timing row
             ach = _achieved_bytes_s(r)
             frac = f"{ach / peak:.4f}" if ach is not None else "-"
             nr = r.get("n_rounds")       # absent in pre-obs dumps -> "-"
@@ -89,7 +102,7 @@ def bench_table(paths, peak_gbs: float):
             fb = r.get("kernel_fallbacks")
             out.append(
                 f"| {dump.get('section', path)} | {r.get('graph', '-')} | "
-                f"{r.get('algo', r.get('variant', '-'))} | "
+                f"{algo} | "
                 f"{r['ms']:.3g} | "
                 f"{nr if nr is not None else '-'} | "
                 f"{rt if rt is not None else '-'} | "

@@ -14,9 +14,11 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--scale=NAME] [--json]
 
 ``--json`` additionally writes BENCH_<section>.json per section (schema:
 {"section", "scale", "rows": [{... every CSV column, plus the normalized
-keys graph/algo/ms/ws_mb/colors/gather_passes/spec_key/spec when the
-section has them}]}) so the perf trajectory is machine-trackable across
-PRs; CI uploads these as artifacts.  ``spec``/``spec_key`` echo the
+keys the section's SECTION_KEYS schema declares}]}) so the perf trajectory
+is machine-trackable across PRs; CI uploads these as artifacts (tiny AND
+small scale).  Normalized keys a section does not declare are omitted, not
+null-backfilled — non-coloring sections (lm_step, colored_scatter) carry
+no graph/algo/ms/spec keys at all.  ``spec``/``spec_key`` echo the
 resolved ``repro.api.ColoringSpec`` of the row's coloring call (DESIGN.md
 §11), so trajectories key on the exact task, not just the column values.
 
@@ -33,15 +35,39 @@ import time
 SECTIONS = ["table1", "conflicts", "colors", "forbidden", "distance2",
             "colored_scatter", "incremental", "lm_step"]
 SCALES = ["tiny", "small", "medium"]
+# (SECTION_KEYS below must stay exhaustive over SECTIONS — checked at
+# import so a new section cannot silently ship schema-less)
 
-# keys every BENCH_*.json row carries (None when the section lacks them);
-# spec/spec_key are the resolved repro.api.ColoringSpec of the row's coloring
-# call (None for rows that never invoke a coloring engine, e.g. lm_step);
-# n_rounds/retries come from the row's ColoringResult and kernel_fallbacks
-# is the kernels.fallback counter delta attributed to the row (DESIGN.md §12)
-NORMALIZED_KEYS = ("graph", "algo", "ms", "ws_mb", "colors",
-                   "gather_passes", "spec_key", "spec",
-                   "n_rounds", "retries", "kernel_fallbacks")
+# Normalized keys are declared PER SECTION: a BENCH_<section>.json row
+# carries a normalized key only when the section's schema declares it (plus
+# every raw CSV column it emitted).  Sections that never invoke a coloring
+# engine (lm_step, colored_scatter) therefore no longer emit garbage rows
+# full of null graph/algo/ms/spec keys — and lm_step's model-parameter
+# footprint is its own ``params_mb`` column, never misattributed to the
+# coloring sections' forbidden-working-set ``ws_mb``.
+# spec/spec_key are the resolved repro.api.ColoringSpec of the row's
+# coloring call; n_rounds/retries come from the row's ColoringResult and
+# kernel_fallbacks is the kernels.fallback counter delta attributed to the
+# row (DESIGN.md §12) — tracked for every section, kernels dispatch
+# everywhere.
+_COLORING_KEYS = ("graph", "algo", "ms", "ws_mb", "colors", "gather_passes",
+                  "spec_key", "spec", "n_rounds", "retries",
+                  "kernel_fallbacks")
+SECTION_KEYS = {
+    "table1": _COLORING_KEYS,
+    "conflicts": ("graph", "algo", "ws_mb", "colors", "spec_key", "spec",
+                  "n_rounds", "retries", "kernel_fallbacks"),
+    "colors": ("graph", "algo", "ws_mb", "colors", "spec_key", "spec",
+               "n_rounds", "retries", "kernel_fallbacks"),
+    "forbidden": ("graph", "algo", "ms", "ws_mb", "kernel_fallbacks"),
+    "distance2": _COLORING_KEYS + ("bytes_moved", "kernel"),
+    "colored_scatter": ("ms", "ws_mb", "kernel_fallbacks"),
+    "incremental": ("graph", "ws_mb", "spec_key", "spec", "n_rounds",
+                    "retries", "kernel_fallbacks"),
+    "lm_step": ("params_mb", "kernel_fallbacks"),
+}
+assert set(SECTION_KEYS) == set(SECTIONS), \
+    (sorted(set(SECTION_KEYS) ^ set(SECTIONS)))
 
 
 def lm_step(scale: str = "small") -> None:
@@ -61,13 +87,16 @@ def lm_step(scale: str = "small") -> None:
 
     archs = ("qwen3-1.7b",) if scale == "tiny" else \
         ("qwen3-1.7b", "phi3.5-moe-42b-a6.6b")
+    # params_mb, NOT ws_mb: this is the model-parameter footprint, a
+    # different quantity from the coloring sections' forbidden-table
+    # working set — the shared name used to misattribute it in the JSON
     csv = Csv(["arch", "ms_per_step", "tokens_per_s", "loss0", "loss_end",
-               "ws_mb"])
+               "params_mb"])
     for arch in archs:
         cfg = configs.get(arch).make_smoke()
         params = TF.init_params(jax.random.PRNGKey(0), cfg)
-        ws_mb = sum(x.size * x.dtype.itemsize
-                    for x in jax.tree.leaves(params)) / 2**20
+        params_mb = sum(x.size * x.dtype.itemsize
+                        for x in jax.tree.leaves(params)) / 2**20
         stream = TokenStream(batch=8, seq_len=64, vocab=cfg.vocab)
         step = make_train_step(lambda p, b: TF.train_step_loss(p, cfg, b),
                                OptimizerConfig(warmup_steps=2,
@@ -84,7 +113,7 @@ def lm_step(scale: str = "small") -> None:
         jax.block_until_ready(params)
         dt = (time.perf_counter() - t0) / n
         csv.row(arch, dt * 1e3, 8 * 64 / dt, float(m0["loss"]),
-                float(m["loss"]), ws_mb)
+                float(m["loss"]), params_mb)
 
 
 def _section(name: str):
@@ -110,9 +139,12 @@ def _section(name: str):
 
 
 def _write_json(name: str, scale: str, rows: list, elapsed_s: float) -> str:
+    keys = SECTION_KEYS[name]
+    # declared-but-absent keys surface as explicit nulls (within-section row
+    # variance, e.g. distance2's engine vs kernel rows); undeclared keys are
+    # OMITTED, never null-backfilled — consumers key on presence
     out = {"section": name, "scale": scale, "elapsed_s": elapsed_s,
-           "rows": [{**{k: r.get(k) for k in NORMALIZED_KEYS}, **r}
-                    for r in rows]}
+           "rows": [{**{k: r.get(k) for k in keys}, **r} for r in rows]}
     path = f"BENCH_{name}.json"
     with open(path, "w") as f:
         json.dump(out, f, indent=1, default=str)

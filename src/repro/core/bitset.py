@@ -145,6 +145,30 @@ def mex_words(words: jnp.ndarray, C: int):
     return jnp.where(ovf, jnp.int32(0), mex), ovf
 
 
+def apply_recolor(work: jnp.ndarray, mex: jnp.ndarray, ovf: jnp.ndarray,
+                  c_r: jnp.ndarray):
+    """Recolor-commit tail shared by every detect-and-recolor path: rows in
+    ``work`` take their mex, the rest keep ``c_r``; overflow only counts on
+    rows that actually recolored.  Returns (newc, recolored, ovf&work)."""
+    return jnp.where(work, mex, c_r), work, ovf & work
+
+
+def recolor_epilogue(forb: jnp.ndarray, defect: jnp.ndarray, U: jnp.ndarray,
+                     c_r: jnp.ndarray, C: int):
+    """Fused kernel epilogue: work mask + branch-free mex evaluated on the
+    packed (rows, C//32) words while they are still VMEM/register-resident —
+    the forbidden table never round-trips through HBM.  One code path for the
+    ``detect_recolor`` and ``twohop`` kernels and their jnp refs (firstfit is
+    the degenerate case with no defect test: ``mex_words`` alone).
+
+    Returns (new colors (rows,), recolored (rows,) bool, overflow (rows,)
+    bool) — overflow is only raised on rows that actually recolored.
+    """
+    work = U & defect
+    mex, ovf = mex_words(forb, C)
+    return apply_recolor(work, mex, ovf, c_r)
+
+
 def to_dense(words: jnp.ndarray, C: int) -> jnp.ndarray:
     """Unpack (rows, n_words) -> (rows, C) uint8 (test/debug helper)."""
     rows, nW = words.shape

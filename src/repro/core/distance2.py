@@ -47,6 +47,7 @@ import numpy as np
 
 from repro import registry
 from repro.graphs.csr import CSRGraph, power_graph, to_edge_list
+from repro.core import bitset
 from repro.core import coloring as col
 from repro.core import frontier as fr
 from repro.core.context import PassContext
@@ -235,6 +236,27 @@ def _d2_loop(ell, pri, rows_mask, ctx, cap, max_rounds):
 # --------------------------------------------------------------------------
 # native engine: drivers
 # --------------------------------------------------------------------------
+
+def native_ws_mb(g: CSRGraph, n_chunks: int = 16, C: Optional[int] = None,
+                 impl: str = "bitset") -> float:
+    """Honest peak working set (MB) of one native two-hop gather pass: G's
+    ELL table, the (n,) color/priority vectors, one chunk's transient
+    (cs, W + W²) gathered color+priority panels, and the chunk's packed
+    forbidden table — the last three are exactly the terms the old bench
+    estimate dropped (it counted the ELL and a colors-only panel).  Used by
+    ``benchmarks/bench_distance2.py``; the kernel-level account is
+    ``kernels.ops.twohop_vmem_bytes``.
+    """
+    W = max(g.max_degree, 1)
+    cap = _pick_C_d2(g, C)
+    n = g.n_vertices
+    cs = -(-n // max(int(n_chunks), 1))
+    ell_bytes = n * W * 4
+    vec_bytes = 2 * n * 4
+    gather_bytes = 2 * cs * (W + W * W) * 4     # colors + priorities panels
+    forb_bytes = bitset.ws_bytes(cs, cap, impl)
+    return (ell_bytes + vec_bytes + gather_bytes + forb_bytes) / 2**20
+
 
 def _pick_C_d2(g: CSRGraph, C: Optional[int]) -> int:
     if C is not None:

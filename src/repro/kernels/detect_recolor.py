@@ -41,11 +41,12 @@ def _detect_recolor_kernel(ell_ref, colors_ref, pri_ref, U_ref, rowc_ref,
     forb, defect = jax.lax.fori_loop(
         0, W, body,
         (bitset.init_words(BV, C), jnp.zeros((BV,), jnp.bool_)))
-    work = U & defect
-    mex, ovf = bitset.mex_words(forb, C)
-    newc_ref[...] = jnp.where(work, mex, c_r)
-    rec_ref[...] = work
-    ovf_ref[...] = ovf & work
+    # fused epilogue: mex runs on the packed words while they are still
+    # VMEM-resident — the (BV, C//32) forbidden table never reaches HBM
+    newc, rec, ovf = bitset.recolor_epilogue(forb, defect, U, c_r, C)
+    newc_ref[...] = newc
+    rec_ref[...] = rec
+    ovf_ref[...] = ovf
 
 
 @functools.partial(jax.jit,

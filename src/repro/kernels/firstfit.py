@@ -7,10 +7,12 @@ vectorized compare+OR steps on the VPU — 32× fewer compare lanes and 8× less
 VMEM than the old (BV, C) one-hot bool table, which is what lets the tile
 take bigger BV/C without spilling.  First-fit = branch-free mex over the
 packed words (isolate-lowest-zero-bit + float-exponent bit index,
-``core/bitset.py`` — the identical code path the jnp engines trace).  The
-color vector is VMEM-resident per invocation (graphs to ~4M vertices; beyond
-that the ops.py wrapper falls back to the jnp path / page-indirected design
-notes).
+``core/bitset.py`` — the identical code path the jnp engines trace), fused
+into the kernel epilogue so the packed words never round-trip through HBM
+(the degenerate no-defect case of ``bitset.recolor_epilogue``).  The color
+vector is VMEM-resident per invocation; ``ops.firstfit_vmem_bytes`` is the
+honest account and the ops.py wrapper falls back to the jnp path when it
+busts the budget.
 
 Grid: one program per BV-row block of the chunk being colored.
 """

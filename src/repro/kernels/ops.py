@@ -10,6 +10,18 @@ The coloring dispatchers take ``impl`` ("bitset" | "dense"), forwarded to
 the jnp refs; the Pallas kernels are the packed-bitset expression by
 construction (DESIGN.md §10) and ignore it — every (backend, impl) corner
 must agree bit-for-bit (tests/test_kernels.py).
+
+**VMEM accounting** (DESIGN.md §8.3): every dispatcher shares one honest
+estimator, ``vmem_bytes(kernel, ...)``, that counts what a kernel program
+actually keeps resident — double-buffered (×2) for grid-varying blocks
+(the Pallas pipeline prefetches the next block while the current one
+computes), single-buffered for grid-invariant blocks like the color and
+priority vectors, plus accumulators/scratch.  A kernel only falls back to
+the jnp reference when that estimate busts ``VMEM_BUDGET_BYTES`` —
+post-paging this is the *degenerate-shape* predicate (e.g. the un-pageable
+(n,) vectors alone exceeding the budget), not a cliff at table size: the
+two-hop kernel pages its hop-2 table through VMEM (kernels/twohop.py), so
+arbitrarily large ELL tables stay on the Pallas path.
 """
 from __future__ import annotations
 
@@ -19,13 +31,19 @@ import warnings
 import jax
 import jax.numpy as jnp
 
+from repro.core import bitset
 from repro.kernels import ref
+from repro.kernels import twohop as _twohop_mod
 from repro.kernels.firstfit import firstfit as _firstfit_pallas
 from repro.kernels.detect_recolor import detect_recolor as _dr_pallas
 from repro.kernels.twohop import twohop_detect_recolor as _twohop_pallas
 from repro.kernels.ell_spmm import ell_spmm as _spmm_pallas
 from repro.kernels.flash_attention import flash_attention as _fa_pallas
 from repro.obs import metrics as obs_metrics
+
+# Per-invocation VMEM residency budget (conservative: real cores have
+# ~16 MB; half is left to XLA temporaries and the pipeline itself).
+VMEM_BUDGET_BYTES = 8 * 2**20
 
 
 def default_backend() -> str:
@@ -63,9 +81,117 @@ def _vmem_fallback(kernel: str, detail: str) -> None:
             RuntimeWarning, stacklevel=3)
 
 
+# --------------------------------------------------------------------------
+# honest per-kernel VMEM estimators (unit-pinned by tests/test_kernels.py)
+# --------------------------------------------------------------------------
+
+def firstfit_vmem_bytes(R: int, W: int, n: int, C: int,
+                        block_rows: int = 256) -> int:
+    """Resident bytes of one firstfit program: double-buffered (BV, W) ELL
+    tile, the full (n,) color vector, the packed forbidden accumulator, and
+    double-buffered (BV,) outputs (mex int32 + ovf bool)."""
+    BV = min(block_rows, R)
+    return (2 * BV * W * 4            # ELL tile (pipelined)
+            + n * 4                   # colors (grid-invariant)
+            + BV * bitset.n_words(C) * 4
+            + 2 * BV * (4 + 1))       # outputs
+
+
+def detect_recolor_vmem_bytes(R: int, W: int, n: int, C: int,
+                              block_rows: int = 256) -> int:
+    """firstfit's account plus the (n,) priority vector, the per-block
+    U/rowc/rowp inputs, and the recolored/overflow outputs."""
+    BV = min(block_rows, R)
+    return (2 * BV * W * 4                  # ELL tile
+            + 2 * n * 4                     # colors + priorities
+            + 2 * BV * (1 + 4 + 4)          # U, rowc, rowp
+            + BV * bitset.n_words(C) * 4    # forbidden words
+            + BV * 4                        # defect flags
+            + 2 * BV * (4 + 1 + 1))         # newc, rec, ovf
+
+
+def twohop_vmem_bytes(R: int, W: int, n: int, C: int,
+                      block_rows: int = 128,
+                      page_rows: int | None = None,
+                      n_all: int | None = None) -> int:
+    """Resident bytes of one paged two-hop program: detect_recolor's account
+    plus TWO (page_rows, W) hop-2 table pages (compute + DMA prefetch), the
+    (BV, W) hop-2 gather panel, the rowid block, and the accumulator
+    scratch.  This replaces the old predicate, which counted only the
+    *whole-table* ``n_all*W*4`` bytes and ignored every vector — wrong in
+    both directions once the table is paged."""
+    BV = min(block_rows, R)
+    if page_rows is None:
+        page_rows = _twohop_mod.default_page_rows(n_all if n_all else n, W)
+    return (2 * BV * W * 4                  # row tile
+            + 2 * page_rows * W * 4         # hop-2 pages (double-buffered)
+            + 2 * n * 4                     # colors + priorities
+            + 2 * BV * (1 + 4 + 4 + 4)      # U, rowc, rowp, rowid
+            + BV * W * 4                    # per-neighbor hop-2 gather panel
+            + BV * bitset.n_words(C) * 4    # forbidden word scratch
+            + BV * 4                        # defect scratch
+            + 2 * BV * (4 + 1 + 1))         # newc, rec, ovf
+
+
+def ell_aggregate_vmem_bytes(R: int, W: int, n: int, d: int,
+                             itemsize: int = 4, block_rows: int = 128,
+                             block_feats: int = 128) -> int:
+    """Resident bytes of one ELL-aggregation program: the feature panel is
+    (n, min(block_feats, d)) — the *real* width, not a hardcoded 128-wide
+    panel — double-buffered only when the feature axis actually pages
+    (d > block_feats)."""
+    br = min(block_rows, R)
+    bf = min(block_feats, d)
+    panel_bufs = 2 if d > bf else 1
+    return (2 * br * W * 4                  # ELL tile
+            + panel_bufs * n * bf * itemsize
+            + br * bf * itemsize            # accumulator
+            + 2 * br * bf * itemsize)       # output tile
+
+
+_VMEM_ESTIMATORS = {
+    "firstfit": firstfit_vmem_bytes,
+    "detect_recolor": detect_recolor_vmem_bytes,
+    "twohop": twohop_vmem_bytes,
+    "ell_aggregate": ell_aggregate_vmem_bytes,
+}
+
+
+def vmem_bytes(kernel: str, **shape) -> int:
+    """Honest resident-bytes estimate for ``kernel`` — the single fallback
+    predicate shared by every dispatcher (and the bench working-set
+    accountant)."""
+    try:
+        est = _VMEM_ESTIMATORS[kernel]
+    except KeyError:
+        raise ValueError(f"unknown kernel {kernel!r}; "
+                         f"known: {sorted(_VMEM_ESTIMATORS)}") from None
+    return est(**shape)
+
+
+def _mb(b: int) -> str:
+    return f"{b / 2**20:.1f} MB"
+
+
+# --------------------------------------------------------------------------
+# dispatchers
+# --------------------------------------------------------------------------
+
 def firstfit(ell, colors, C: int = 64, backend: str = "auto",
              impl: str = "bitset", **kw):
     b = _resolve(backend)
+    R, W = ell.shape
+    n = colors.shape[0]
+    if b != "jnp":
+        need = firstfit_vmem_bytes(R, W, n, C,
+                                   kw.get("block_rows", 256))
+        if min(R, W) == 0 or need > VMEM_BUDGET_BYTES:
+            _vmem_fallback(
+                "firstfit",
+                f"resident set for ELL {R}x{W}, n={n}, C={C} is "
+                f"{_mb(need)} > {_mb(VMEM_BUDGET_BYTES)} budget "
+                f"(the (n,) color vector is not pageable)")
+            b = "jnp"
     _dispatched("firstfit", b)
     if b == "jnp":
         return ref.firstfit_ref(ell, colors, C, impl=impl)
@@ -77,6 +203,18 @@ def firstfit(ell, colors, C: int = 64, backend: str = "auto",
 def detect_recolor(ell, colors, pri, U_rows, row_start: int, C: int = 64,
                    backend: str = "auto", impl: str = "bitset", **kw):
     b = _resolve(backend)
+    R, W = ell.shape
+    n = colors.shape[0]
+    if b != "jnp":
+        need = detect_recolor_vmem_bytes(R, W, n, C,
+                                         kw.get("block_rows", 256))
+        if min(R, W) == 0 or need > VMEM_BUDGET_BYTES:
+            _vmem_fallback(
+                "detect_recolor",
+                f"resident set for ELL {R}x{W}, n={n}, C={C} is "
+                f"{_mb(need)} > {_mb(VMEM_BUDGET_BYTES)} budget "
+                f"(the (n,) color/priority vectors are not pageable)")
+            b = "jnp"
     _dispatched("detect_recolor", b)
     if b == "jnp":
         return ref.detect_recolor_ref(ell, colors, pri, row_start, U_rows, C,
@@ -87,39 +225,59 @@ def detect_recolor(ell, colors, pri, U_rows, row_start: int, C: int = 64,
 
 
 def twohop(ell_rows, ell_all, colors, pri, U_rows, row_start: int,
-           C: int = 64, backend: str = "auto", impl: str = "bitset", **kw):
+           C: int = 64, backend: str = "auto", impl: str = "bitset",
+           page_rows: int | None = None, **kw):
     """Fused two-hop (distance-2) detect-and-recolor for rows
-    [row_start, row_start + R).  Falls back to jnp when the full ELL table
-    would not fit VMEM (n_all * W * 4 > ~8MB)."""
+    [row_start, row_start + R).  The hop-2 table is paged through VMEM
+    (``page_rows`` rows per page, None -> ~2 MB pages), so table size no
+    longer forces a fallback; only degenerate shapes — empty tiles, or the
+    un-pageable (n,) color/priority vectors busting the budget — take the
+    jnp reference path."""
     b = _resolve(backend)
-    if b == "pallas" and ell_all.size * 4 > 8 * 2**20:
-        _vmem_fallback(
-            "twohop",
-            f"full ELL table {ell_all.shape[0]}x{ell_all.shape[1]} int32 = "
-            f"{ell_all.size * 4 / 2**20:.1f} MB exceeds the ~8 MB VMEM "
-            f"residency bound")
-        b = "jnp"
+    R, W = ell_rows.shape
+    n = colors.shape[0]
+    n_all = ell_all.shape[0]
+    if b != "jnp":
+        block_rows = kw.get("block_rows", 128)
+        pr = (page_rows if page_rows is not None
+              else _twohop_mod.default_page_rows(n_all, W))
+        need = twohop_vmem_bytes(R, W, n, C, block_rows, pr, n_all=n_all)
+        if min(R, W, n_all) == 0 or need > VMEM_BUDGET_BYTES:
+            _vmem_fallback(
+                "twohop",
+                f"paged resident set for rows {R}x{W}, table {n_all}x{W}, "
+                f"n={n}, C={C}, page_rows={pr} is {_mb(need)} > "
+                f"{_mb(VMEM_BUDGET_BYTES)} budget — the (n,) color/priority "
+                f"vectors are not pageable (degenerate shape)")
+            b = "jnp"
     _dispatched("twohop", b)
     if b == "jnp":
         return ref.twohop_ref(ell_rows, ell_all, colors, pri, row_start,
                               U_rows, C, impl=impl)
     interp = b == "pallas_interpret"
     return _twohop_pallas(ell_rows, ell_all, colors, pri, U_rows,
-                          row_start=row_start, C=C, interpret=interp, **kw)
+                          row_start=row_start, C=C, page_rows=page_rows,
+                          interpret=interp, **kw)
 
 
 def ell_aggregate(ell, feats, op: str = "sum", backend: str = "auto", **kw):
-    """GNN neighbor aggregation. Falls back to jnp when the feature panel
-    would not fit VMEM (n * block_feats * 4 > ~8MB)."""
+    """GNN neighbor aggregation.  Falls back to jnp when the honest resident
+    set (feature panel at its REAL width min(block_feats, d), not a
+    hardcoded 128 lanes) busts the VMEM budget."""
     b = _resolve(backend)
-    n = feats.shape[0]
-    if b == "pallas" and n * 128 * feats.dtype.itemsize > 8 * 2**20:
-        _vmem_fallback(
-            "ell_aggregate",
-            f"feature panel {n}x128 ({feats.dtype}) = "
-            f"{n * 128 * feats.dtype.itemsize / 2**20:.1f} MB exceeds the "
-            f"~8 MB VMEM residency bound")
-        b = "jnp"
+    R, W = ell.shape
+    n, d = feats.shape
+    if b != "jnp":
+        need = ell_aggregate_vmem_bytes(
+            R, W, n, d, feats.dtype.itemsize,
+            kw.get("block_rows", 128), kw.get("block_feats", 128))
+        if min(R, W, d) == 0 or need > VMEM_BUDGET_BYTES:
+            _vmem_fallback(
+                "ell_aggregate",
+                f"resident set for ELL {R}x{W}, feature panel {n}x"
+                f"{min(kw.get('block_feats', 128), d)} ({feats.dtype}) is "
+                f"{_mb(need)} > {_mb(VMEM_BUDGET_BYTES)} budget")
+            b = "jnp"
     _dispatched("ell_aggregate", b)
     if b == "jnp":
         return ref.ell_spmm_ref(ell, feats, op)

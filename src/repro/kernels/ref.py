@@ -63,10 +63,8 @@ def detect_recolor_ref(ell, colors, pri, row_start: int, U_rows, C: int,
     nbrp = jnp.where(ell >= 0, pri[jnp.clip(ell, 0, n - 1)], -1)
     defect = ((nbrc == c_r[:, None]) & (c_r[:, None] >= 0)
               & (nbrp > p_r[:, None])).any(axis=1)
-    work = U_rows & defect
     mex, ovf = _forbidden_mex(nbrc, C, impl)
-    newc = jnp.where(work, mex, c_r)
-    return newc, work, ovf & work
+    return bitset.apply_recolor(U_rows & defect, mex, ovf, c_r)
 
 
 # --------------------------------------------------------------------------
@@ -105,10 +103,8 @@ def twohop_ref(ell_rows, ell_all, colors, pri, row_start: int, U_rows, C: int,
     allp = jnp.concatenate([np1, np2], axis=1)
     defect = ((allc == c_r[:, None]) & (c_r[:, None] >= 0)
               & (allp > p_r[:, None])).any(axis=1)
-    work = U_rows & defect
     mex, ovf = _forbidden_mex(allc, C, impl)
-    newc = jnp.where(work, mex, c_r)
-    return newc, work, ovf & work
+    return bitset.apply_recolor(U_rows & defect, mex, ovf, c_r)
 
 
 # --------------------------------------------------------------------------
