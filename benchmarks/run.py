@@ -7,6 +7,7 @@
   distance2        paper §6 outlook (G^2 density; native vs materialized)
   colored_scatter  the technique applied to GNN aggregation
   incremental      dynamic-graph incremental recoloring vs from-scratch
+  service          multi-tenant ColoringService: megabatched vs loop step
   lm_step          measured smoke-scale LM train-step wall time
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--scale=NAME] [--json]
@@ -33,7 +34,7 @@ import time
 
 
 SECTIONS = ["table1", "conflicts", "colors", "forbidden", "distance2",
-            "colored_scatter", "incremental", "lm_step"]
+            "colored_scatter", "incremental", "service", "lm_step"]
 SCALES = ["tiny", "small", "medium"]
 # (SECTION_KEYS below must stay exhaustive over SECTIONS — checked at
 # import so a new section cannot silently ship schema-less)
@@ -64,6 +65,7 @@ SECTION_KEYS = {
     "colored_scatter": ("ms", "ws_mb", "kernel_fallbacks"),
     "incremental": ("graph", "ws_mb", "spec_key", "spec", "n_rounds",
                     "retries", "kernel_fallbacks"),
+    "service": ("ms", "kernel_fallbacks"),
     "lm_step": ("params_mb", "kernel_fallbacks"),
 }
 assert set(SECTION_KEYS) == set(SECTIONS), \
@@ -131,6 +133,8 @@ def _section(name: str):
         from benchmarks import bench_colored_scatter as b
     elif name == "incremental":
         from benchmarks import bench_incremental as b
+    elif name == "service":
+        from benchmarks import bench_service as b
     elif name == "lm_step":
         return lm_step
     else:

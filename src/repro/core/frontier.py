@@ -222,6 +222,86 @@ def _repair_compact_loop(ell, osrc, odst, pri, colors, U, ctx, cap,
                            max_rounds)
 
 
+def _mega_compact_repair(ctx, cap, pass_small, colors, U, max_rounds,
+                         esc0):
+    """Batch-axis-tolerant compacted repair (DESIGN.md §13).
+
+    Same per-round semantics as ``_compact_repair``'s small branch
+    (``U_{r+1} = recolored_r``, forced uncolored seeds keep the loop alive,
+    terminates on a zero-defect pass) but written to be ``vmap``-ed across a
+    megabatch slot axis, which rules out the two per-instance control-flow
+    escapes of the scalar loop:
+
+      * no ``lax.cond`` full-width fallback — under vmap a batched predicate
+        executes BOTH branches for every slot each round, so one tenant's
+        frontier overflow would charge the whole slot class the O(n_pad*W)
+        full-width pass;
+      * no in-loop cap doubling — a doubled C is a new jit program, i.e. a
+        batch-wide recompile.
+
+    Instead, either condition (compacted frontier past ``cap``, or the mex
+    overflowing the color cap) raises the instance's ``escape`` flag, zeroes
+    its frontier so its loop terminates, and leaves the rest of the batch
+    running at full speed; the host redoes escaped slots through the
+    per-tenant ``_run_with_retry`` path, whose results are bit-identical to
+    what the non-escaping loop would have produced.  Returns
+    ``(colors, n_rounds, total_defects, escape)`` — colors of an escaped
+    instance are garbage by contract and must be discarded.
+
+    ``esc0`` marks instances escaped *before* this repair (an insert wave
+    overflowed the buffer, or an earlier fused batch round escaped): they
+    start with a zeroed frontier and run ZERO iterations — without this an
+    already-garbage instance could fail to converge and spin the batched
+    loop to ``max_rounds`` for everyone.
+    """
+    n, n_pad, C, n_chunks, impl = ctx.unpack()
+
+    def compact(U):
+        idx = jnp.nonzero(U, size=cap, fill_value=n_pad)[0].astype(jnp.int32)
+        return idx, idx < n_pad
+
+    def cond(s):
+        colors, U, r, last, tot, esc = s
+        return (last > 0) & (r < max_rounds)
+
+    def body(s):
+        colors, U, r, last, tot, esc = s
+        count = U.sum(dtype=jnp.int32)
+        esc = esc | (count > cap)      # frontier overflow: host must redo
+        n_forced = (U & (colors < 0)).sum(dtype=jnp.int32)
+        idx, live = compact(U)
+        colors2, recolored, n_def, ovf = pass_small(colors, idx, live)
+        esc = esc | ovf                # color-cap overflow: host must redo
+        # an escaped instance stops looping (its colors are discarded);
+        # forced seeds are speculative, same liveness rule as the scalar loop
+        last2 = jnp.where(esc, 0, n_def + n_forced)
+        return colors2, recolored, r + 1, last2, tot + n_def, esc
+
+    s = (colors, U, jnp.int32(0),
+         jnp.where(esc0, jnp.int32(0), jnp.int32(1)), jnp.int32(0), esc0)
+    colors, U, r, _, tot, esc = jax.lax.while_loop(cond, body, s)
+    return colors, r, tot, esc
+
+
+@functools.partial(jax.jit, static_argnames=("ctx", "cap", "max_rounds"))
+def _repair_mega_loop(ell, osrc, odst, pri, colors, U, esc0, ctx, cap,
+                      max_rounds):
+    """Megabatched externally-seeded repair: every operand carries a leading
+    slot axis and ONE dispatch repairs every slot's coloring.  Per-slot
+    ``(colors, n_rounds, total_defects, escape)``; a raised escape flag
+    means that slot must be redone per-tenant (see ``_mega_compact_repair``).
+    ``esc0`` flags slots already escaped upstream — they are frozen at zero
+    iterations.  Slots whose loops finish early are frozen by the
+    ``while_loop`` batching rule, so per-slot results are bit-identical to
+    the scalar small-branch loop."""
+    def one(ell_i, osrc_i, odst_i, pri_i, colors_i, U_i, esc0_i):
+        pass_small, _ = _d1_passes(ctx, ell_i, osrc_i, odst_i, pri_i)
+        return _mega_compact_repair(ctx, cap, pass_small, colors_i, U_i,
+                                    max_rounds, esc0_i)
+
+    return jax.vmap(one)(ell, osrc, odst, pri, colors, U, esc0)
+
+
 @registry.register_engine("rsoc_compact", distance=1, mode="static",
                           replaces="color_rsoc_compact")
 def _rsoc_compact_engine(g: CSRGraph, spec) -> col.ColoringResult:

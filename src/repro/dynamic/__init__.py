@@ -10,11 +10,14 @@ delta, not the graph.
 
   delta.py        fixed-shape batched edge insert/delete against ELL+overflow
   incremental.py  DynamicColoringState + recolor_incremental
+  megabatch.py    slot-class stacking: one device dispatch steps N tenants
   service.py      ColoringService: long-lived multi-graph engine with a
-                  submit/step API and version-memoized schedule artifacts
+                  double-buffered submit/step queue, megabatched stepping,
+                  and a byte-budgeted version-memoized artifact cache
 """
 from repro.dynamic.incremental import (  # noqa: F401
     DynamicColoringState, dynamic_state, recolor_incremental,
 )
 from repro.dynamic.delta import state_to_csr  # noqa: F401
-from repro.dynamic.service import ColoringService  # noqa: F401
+from repro.dynamic.megabatch import slot_key, step_group  # noqa: F401
+from repro.dynamic.service import ArtifactCache, ColoringService  # noqa: F401

@@ -27,8 +27,18 @@ count equals the largest per-row multiplicity in the batch (1–4 for
 random batches).  Re-inserting a present edge — ELL- or
 overflow-resident — is a no-op, so upsert-style streams do not grow the
 encoding.
+
+Wave *planning* (host-side numpy: chunking, wave grouping, FILL padding,
+touched-mask accumulation) is factored into ``plan_updates`` so the
+megabatched multi-tenant path (``dynamic/megabatch.py``, DESIGN.md §13) can
+build per-tenant plans and dispatch them through the ``_mega_*`` batched
+kernels — one ``vmap``-ed device call applies wave j of every tenant in a
+slot class.  An all-FILL wave is a no-op through every kernel, which is what
+lets tenants with fewer waves ride a longer batch for free.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +48,9 @@ from repro.graphs.csr import CSRGraph, FILL, ell_to_edges, from_edges
 
 
 # --------------------------------------------------------------------------
-# jitted kernels (fixed (delta_cap,) wave shapes)
+# wave kernels (fixed (delta_cap,) shapes); the _impl bodies are plain
+# functions so they can be jitted per-tenant AND vmapped across a
+# megabatch slot axis without retracing tricks
 # --------------------------------------------------------------------------
 
 _SENTINEL = jnp.int32(2147483647)                   # sorts after any id
@@ -68,8 +80,7 @@ def _lexsorted(s, d):
     return s[order], d[order]
 
 
-@jax.jit
-def _delete_overflow(osrc, odst, dels):
+def _delete_overflow_impl(osrc, odst, dels):
     """Clear every overflow slot matching a delete pair (either direction).
 
     One vectorized membership test: delete pairs (both directions) are
@@ -85,8 +96,7 @@ def _delete_overflow(osrc, odst, dels):
     return jnp.where(dead, FILL, osrc), jnp.where(dead, FILL, odst)
 
 
-@jax.jit
-def _delete_ell_wave(ell, a, b):
+def _delete_ell_wave_impl(ell, a, b):
     """Clear slots == b[i] in row a[i]; rows unique within the wave."""
     n_pad = ell.shape[0]
     asafe = jnp.clip(a, 0, n_pad - 1)
@@ -96,11 +106,24 @@ def _delete_ell_wave(ell, a, b):
     return ell.at[aw].set(rows, mode="drop")
 
 
-@jax.jit
-def _insert_wave(ell, osrc, odst, a, b):
+def _sort_overflow_impl(osrc, odst):
+    """Sorted-presence snapshot of the overflow buffer (FILL slots pushed
+    past the end as sentinels).  The sort is by far the most expensive step
+    of an insert (XLA sort over a buffer orders of magnitude bigger than a
+    wave), and one snapshot per *batch* suffices: ``plan_updates`` dedups
+    directed pairs, so no wave ever queries a pair that an earlier wave of
+    the same batch spilled."""
+    olive = (osrc >= 0) & (odst >= 0)
+    return _lexsorted(jnp.where(olive, osrc, _SENTINEL),
+                      jnp.where(olive, odst, _SENTINEL))
+
+
+def _insert_wave_impl(ell, osrc, odst, s_sorted, d_sorted, a, b):
     """Insert b[i] into row a[i] (rows unique within the wave), spilling
-    row-full entries to distinct free overflow slots.  Returns
-    (ell, osrc, odst, fail): fail = some spill found no free slot."""
+    row-full entries to distinct free overflow slots.  ``s_sorted`` /
+    ``d_sorted`` is the batch's overflow presence snapshot
+    (``_sort_overflow_impl``).  Returns (ell, osrc, odst, fail):
+    fail = some spill found no free slot."""
     n_pad, W = ell.shape
     ncap = osrc.shape[0]
     k = a.shape[0]
@@ -110,9 +133,6 @@ def _insert_wave(ell, osrc, odst, a, b):
     # presence = ELL row ∪ overflow buffer: without the overflow side an
     # upsert-style stream re-inserting an overflow-resident edge would
     # append a duplicate slot per batch and grow the buffer without bound
-    olive = (osrc >= 0) & (odst >= 0)
-    s_sorted, d_sorted = _lexsorted(jnp.where(olive, osrc, _SENTINEL),
-                                    jnp.where(olive, odst, _SENTINEL))
     present = ((rows == b[:, None]).any(axis=1)
                | _pair_member(a, b, s_sorted, d_sorted))
     slot = jnp.argmax(rows == FILL, axis=1)         # first free slot (or 0)
@@ -131,14 +151,48 @@ def _insert_wave(ell, osrc, odst, a, b):
     return ell, osrc, odst, fail
 
 
+_delete_overflow = jax.jit(_delete_overflow_impl)
+_delete_ell_wave = jax.jit(_delete_ell_wave_impl)
+_sort_overflow = jax.jit(_sort_overflow_impl)
+_insert_wave = jax.jit(_insert_wave_impl)
+
+# Batched variants: one device dispatch applies wave j of every tenant in a
+# megabatch slot class (leading axis = slot).  The per-slot bodies are the
+# exact per-tenant kernels, so a megabatched wave is bit-identical to N
+# per-tenant waves; an all-FILL slot row is a no-op (dynamic/megabatch.py).
+_mega_delete_overflow = jax.jit(jax.vmap(_delete_overflow_impl))
+_mega_delete_ell_wave = jax.jit(jax.vmap(
+    lambda ell, w: _delete_ell_wave_impl(ell, w[:, 0], w[:, 1])))
+_mega_sort_overflow = jax.jit(jax.vmap(_sort_overflow_impl))
+_mega_insert_wave = jax.jit(jax.vmap(
+    lambda ell, osrc, odst, ss, ds, w: _insert_wave_impl(
+        ell, osrc, odst, ss, ds, w[:, 0], w[:, 1])))
+
+
 # --------------------------------------------------------------------------
 # host orchestration
 # --------------------------------------------------------------------------
 
-def _pad_pairs(pairs: np.ndarray, cap: int) -> jnp.ndarray:
+def _pad_pairs_np(pairs: np.ndarray, cap: int) -> np.ndarray:
     out = np.full((cap, 2), FILL, dtype=np.int32)
     out[:len(pairs)] = pairs
-    return jnp.asarray(out)
+    return out
+
+
+def _dedup_pairs(p: np.ndarray) -> np.ndarray:
+    """Unique rows of a non-negative (k, 2) int32 array, lexicographically
+    sorted — equivalent to ``np.unique(p, axis=0)`` but on a fused int64
+    key (axis-0 unique goes through a void view and is ~10x slower, which
+    matters at service rates where planning is per tenant per batch)."""
+    key = (p[:, 0].astype(np.int64) << 32) | p[:, 1].astype(np.int64)
+    _, idx = np.unique(key, return_index=True)
+    return p[idx]
+
+
+def empty_wave(cap: int) -> np.ndarray:
+    """An all-FILL (cap, 2) wave — a no-op through every wave kernel (used
+    to pad shorter tenants inside a megabatch)."""
+    return np.full((cap, 2), FILL, dtype=np.int32)
 
 
 def _waves(pairs: np.ndarray, cap: int):
@@ -156,7 +210,167 @@ def _waves(pairs: np.ndarray, cap: int):
     for w in range(int(rank.max()) + 1 if len(rank) else 0):
         sel = order[rank == w]
         for lo in range(0, len(sel), cap):
-            yield _pad_pairs(pairs[sel[lo:lo + cap]], cap)
+            yield _pad_pairs_np(pairs[sel[lo:lo + cap]], cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdatePlan:
+    """Host-side wave plan of one update batch (relabeled-space ids).
+
+    The plan is the deterministic product of ``plan_updates`` — the SAME
+    plan drives the per-tenant ``apply_updates`` loop and the megabatched
+    dispatch, which is what makes the two paths bit-identical by
+    construction.  All waves are FILL-padded ``(delta_cap, 2)`` int32.
+    """
+
+    ovf_del: tuple    # overflow-delete chunks (undirected pairs)
+    ell_del: tuple    # ELL delete waves (directed, unique rows per wave)
+    ins: tuple        # insert waves (directed, unique rows per wave)
+    touched: np.ndarray             # (n_pad,) bool repair seed mask
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.ovf_del) + len(self.ell_del) + len(self.ins)
+
+
+def plan_updates(ins: np.ndarray, dels: np.ndarray, delta_cap: int,
+                 n_pad: int) -> UpdatePlan:
+    """Plan a delete-then-insert batch into fixed-shape device waves."""
+    ins = np.asarray(ins, dtype=np.int32).reshape(-1, 2)
+    dels = np.asarray(dels, dtype=np.int32).reshape(-1, 2)
+
+    ovf_del = []
+    ell_del = []
+    if len(dels):
+        for lo in range(0, len(dels), delta_cap):
+            ovf_del.append(_pad_pairs_np(dels[lo:lo + delta_cap], delta_cap))
+        dd = np.concatenate([dels, dels[:, ::-1]])
+        dd = _dedup_pairs(dd)                     # idempotent clears
+        ell_del.extend(_waves(dd, delta_cap))
+
+    ins_waves = []
+    if len(ins):
+        ii = np.concatenate([ins, ins[:, ::-1]])
+        ii = ii[ii[:, 0] != ii[:, 1]]             # drop self-loops
+        # dedup directed pairs: besides shaving waves, this is what lets the
+        # overflow presence snapshot be taken ONCE per batch — no wave can
+        # re-query a pair an earlier wave of the same batch spilled
+        ii = _dedup_pairs(ii)
+        ins_waves.extend(_waves(ii, delta_cap))
+
+    touched = np.zeros((n_pad,), bool)
+    for e in (ins, dels):
+        if len(e):
+            touched[e.ravel()] = True
+    return UpdatePlan(ovf_del=tuple(ovf_del), ell_del=tuple(ell_del),
+                      ins=tuple(ins_waves), touched=touched)
+
+
+def _rank_waves_group(pairs: np.ndarray, slots: np.ndarray, n_slots: int,
+                      cap: int) -> np.ndarray:
+    """Fused-across-slots equivalent of ``_dedup_pairs`` + ``_waves``:
+    directed ``pairs`` tagged with ``slots`` ids come out as ONE
+    ``(n_waves, n_slots, cap, 2)`` FILL-padded tensor whose slice
+    ``[:, b]`` is bit-identical to ``_waves(_dedup_pairs(pairs of b), cap)``
+    — same dedup order (lex by (a, b)), same occurrence-rank partition,
+    same over-``cap`` chunk splitting — built with a handful of O(total)
+    numpy ops instead of a sort + partition per slot.
+    """
+    if len(pairs) == 0:
+        return np.zeros((0, n_slots, cap, 2), np.int32)
+    # dedup per slot + lex sort by (slot, a, b) on one fused int64 key
+    q = ((slots.astype(np.int64) << 48)
+         | (pairs[:, 0].astype(np.int64) << 24)
+         | pairs[:, 1].astype(np.int64))
+    uq = np.unique(q)
+    s = (uq >> 48).astype(np.int64)
+    a = ((uq >> 24) & 0xFFFFFF).astype(np.int32)
+    b = (uq & 0xFFFFFF).astype(np.int32)
+    m = len(uq)
+    idx = np.arange(m)
+
+    def group_pos(key):
+        first = np.empty(m, bool)
+        first[0] = True
+        np.not_equal(key[1:], key[:-1], out=first[1:])
+        start = np.maximum.accumulate(np.where(first, idx, 0))
+        return first, idx - start
+
+    # rank = occurrence # of row a within its slot (same-row entries must
+    # land in different waves)
+    _, rank = group_pos(uq >> 24)
+    # position within the (slot, rank) group decides over-cap chunking.
+    # Ranks interleave in (slot, a, b) order, so group by (slot, rank) with
+    # a stable sort — stability keeps the (a, b) order within each group,
+    # matching the scalar ``_waves`` emission exactly
+    srk = (s << 24) | rank
+    order = np.argsort(srk, kind="stable")
+    s, a, b, srk = s[order], a[order], b[order], srk[order]
+    g_first, pos = group_pos(srk)
+    # wave ordinal: ranks in order, each rank's chunks sequentially —
+    # groups are already slot-major / rank-minor, so a per-slot running
+    # chunk count reproduces the scalar emission order
+    gidx = np.cumsum(g_first) - 1                  # entry -> group index
+    sizes = np.bincount(gidx)
+    nch = -(sizes // -cap)                         # chunks per group
+    cum = np.cumsum(nch) - nch                     # global chunk prefix
+    group_slot = s[g_first]
+    g_range = np.arange(len(sizes))
+    slot_first = np.empty(len(sizes), bool)
+    slot_first[0] = True
+    np.not_equal(group_slot[1:], group_slot[:-1], out=slot_first[1:])
+    slot_base = cum[np.maximum.accumulate(np.where(slot_first, g_range, 0))]
+    wave = (cum - slot_base)[gidx] + pos // cap
+
+    n_waves = int(wave.max()) + 1
+    out = np.full((n_waves, n_slots, cap, 2), FILL, np.int32)
+    out[wave, s, pos % cap, 0] = a
+    out[wave, s, pos % cap, 1] = b
+    return out
+
+
+def plan_group(batches, delta_cap: int, n_pad: int):
+    """Vectorized ``plan_updates`` over a whole slot class for ONE batch
+    round.  ``batches[b]`` is slot b's relabeled ``(ins, dels)`` pair of
+    (k, 2) int32 arrays (empty arrays for a no-op slot).  Returns numpy
+    ``(ovf_w, ell_w, ins_w, touched)`` — three ``(n_waves, n_slots,
+    delta_cap, 2)`` wave tensors and a ``(n_slots, n_pad)`` bool repair
+    seed mask — where every slot's slices are bit-identical to its own
+    ``plan_updates`` waves.  Collapsing the per-slot sorts into fused-key
+    passes is a several-fold planning speedup at megabatch tenant counts.
+    """
+    n_slots = len(batches)
+    touched = np.zeros((n_slots, n_pad), bool)
+    for bi, (ins, dels) in enumerate(batches):
+        for e in (ins, dels):
+            if len(e):
+                touched[bi, np.ravel(e)] = True
+
+    # overflow deletes: raw undirected pairs chunked per slot
+    n_ovf = max((-(len(d) // -delta_cap)) for _, d in batches)
+    ovf_w = np.full((n_ovf, n_slots, delta_cap, 2), FILL, np.int32)
+    for bi, (_, dels) in enumerate(batches):
+        for j in range(0, len(dels), delta_cap):
+            ovf_w[j // delta_cap, bi, :len(dels[j:j + delta_cap])] = \
+                dels[j:j + delta_cap]
+
+    def fused(kind):
+        ps, ss = [], []
+        for bi, (ins, dels) in enumerate(batches):
+            e = ins if kind == "ins" else dels
+            if not len(e):
+                continue
+            d = np.concatenate([e, e[:, ::-1]])
+            if kind == "ins":
+                d = d[d[:, 0] != d[:, 1]]          # drop self-loops
+            ps.append(d)
+            ss.append(np.full((len(d),), bi, np.int64))
+        if not ps:
+            return np.zeros((0, n_slots, delta_cap, 2), np.int32)
+        return _rank_waves_group(np.concatenate(ps), np.concatenate(ss),
+                                 n_slots, delta_cap)
+
+    return ovf_w, fused("dels"), fused("ins"), touched
 
 
 def apply_updates(ell, osrc, odst, ins: np.ndarray, dels: np.ndarray,
@@ -167,39 +381,70 @@ def apply_updates(ell, osrc, odst, ins: np.ndarray, dels: np.ndarray,
     bool device mask of the endpoints of every update (the repair seed set),
     ``n_grows`` counts overflow-buffer doublings performed.
     """
-    n_pad = ell.shape[0]
-    ins = np.asarray(ins, dtype=np.int32).reshape(-1, 2)
-    dels = np.asarray(dels, dtype=np.int32).reshape(-1, 2)
-
-    if len(dels):
-        for lo in range(0, len(dels), delta_cap):
-            osrc, odst = _delete_overflow(
-                osrc, odst, _pad_pairs(dels[lo:lo + delta_cap], delta_cap))
-        dd = np.concatenate([dels, dels[:, ::-1]])
-        for wave in _waves(dd, delta_cap):
-            ell = _delete_ell_wave(ell, wave[:, 0], wave[:, 1])
-
+    plan = plan_updates(ins, dels, delta_cap, ell.shape[0])
+    for wave in plan.ovf_del:
+        osrc, odst = _delete_overflow(osrc, odst, jnp.asarray(wave))
+    for wave in plan.ell_del:
+        ell = _delete_ell_wave(ell, jnp.asarray(wave[:, 0]),
+                               jnp.asarray(wave[:, 1]))
     grows = 0
-    if len(ins):
-        ii = np.concatenate([ins, ins[:, ::-1]])
-        ii = ii[ii[:, 0] != ii[:, 1]]             # drop self-loops
-        for wave in _waves(ii, delta_cap):
-            while True:
-                ell2, osrc2, odst2, fail = _insert_wave(
-                    ell, osrc, odst, wave[:, 0], wave[:, 1])
-                if not bool(fail):
-                    ell, osrc, odst = ell2, osrc2, odst2
-                    break
-                # overflow full: grow and re-apply the wave (idempotent)
-                osrc, odst = grow_overflow(osrc2, odst2)
-                ell = ell2
-                grows += 1
+    if plan.ins:
+        ss, ds = _sort_overflow(osrc, odst)       # once per batch
+    for wave in plan.ins:
+        a = jnp.asarray(wave[:, 0])
+        b = jnp.asarray(wave[:, 1])
+        while True:
+            ell2, osrc2, odst2, fail = _insert_wave(ell, osrc, odst,
+                                                    ss, ds, a, b)
+            if not bool(fail):
+                ell, osrc, odst = ell2, osrc2, odst2
+                break
+            # overflow full: grow and re-apply the wave (idempotent).  The
+            # grown buffer holds this wave's partial spills, so the snapshot
+            # must be retaken — re-applying against the stale one would
+            # duplicate the entries that did land
+            osrc, odst = grow_overflow(osrc2, odst2)
+            ell = ell2
+            grows += 1
+            ss, ds = _sort_overflow(osrc, odst)
+    return ell, osrc, odst, jnp.asarray(plan.touched), grows
 
-    touched = np.zeros((n_pad,), bool)
-    for e in (ins, dels):
-        if len(e):
-            touched[e.ravel()] = True
-    return ell, osrc, odst, jnp.asarray(touched), grows
+
+def apply_updates_mega(ell_b, osrc_b, odst_b, plans, delta_cap: int):
+    """Apply one ``UpdatePlan`` per slot in lockstep (DESIGN.md §13).
+
+    ``ell_b``/``osrc_b``/``odst_b`` carry a leading slot axis; ``plans`` is
+    one plan per slot (shorter tenants are padded with no-op FILL waves up
+    to the longest plan).  Each wave index is ONE device dispatch for the
+    whole slot class.  Unlike ``apply_updates`` there is no grow-and-retry:
+    a slot whose insert wave finds the overflow buffer full raises its
+    ``fail`` flag and the caller escapes that slot to the per-tenant path —
+    growing in place would change the slot's buffer shape and force a
+    batch-wide recompile.
+
+    Returns (ell_b, osrc_b, odst_b, fail) with ``fail`` a host bool array.
+    """
+    pad = empty_wave(delta_cap)
+
+    def stacked(kind: str, j: int):
+        ws = [getattr(p, kind)[j] if j < len(getattr(p, kind)) else pad
+              for p in plans]
+        return jnp.asarray(np.stack(ws))
+
+    for j in range(max(len(p.ovf_del) for p in plans)):
+        osrc_b, odst_b = _mega_delete_overflow(osrc_b, odst_b,
+                                               stacked("ovf_del", j))
+    for j in range(max(len(p.ell_del) for p in plans)):
+        ell_b = _mega_delete_ell_wave(ell_b, stacked("ell_del", j))
+    fail = np.zeros((len(plans),), bool)
+    n_ins = max(len(p.ins) for p in plans)
+    if n_ins:
+        ss_b, ds_b = _mega_sort_overflow(osrc_b, odst_b)  # once per batch
+    for j in range(n_ins):
+        ell_b, osrc_b, odst_b, fail_j = _mega_insert_wave(
+            ell_b, osrc_b, odst_b, ss_b, ds_b, stacked("ins", j))
+        fail |= np.asarray(fail_j)
+    return ell_b, osrc_b, odst_b, fail
 
 
 def grow_overflow(osrc, odst, factor: int = 2):

@@ -51,6 +51,9 @@ class DynamicColoringState:
     perm: np.ndarray         # old id -> new id
     inv_perm: np.ndarray     # new id -> old id
     forbidden_impl: str = "bitset"  # forbidden-set representation (§10)
+    max_rounds: int = 1000          # repair-round bound (from the spec the
+                                    # graph was added with; threaded through
+                                    # every subsequent repair)
     version: int = 0
     last_rounds: int = 0
     last_conflicts: int = 0
@@ -122,7 +125,7 @@ def dynamic_state(g: CSRGraph, seed: int = 0, n_chunks: int = 16,
         frontier_cap=frontier.frontier_cap(prob.n_pad, n_chunks,
                                            frontier_frac),
         delta_cap=int(delta_cap), perm=prob.perm, inv_perm=inv_perm,
-        forbidden_impl=impl,
+        forbidden_impl=impl, max_rounds=int(max_rounds),
         version=0, last_rounds=int(r), last_conflicts=int(tot),
         last_gather_passes=1 + int(r), total_gather_passes=1 + int(r),
         retries=retries, ovf_grows=0)
@@ -139,13 +142,19 @@ def _check_edges(edges, n: int, what: str) -> np.ndarray:
 
 def recolor_incremental(state: DynamicColoringState,
                         inserts=None, deletes=None,
-                        max_rounds: int = 1000) -> DynamicColoringState:
+                        max_rounds: Optional[int] = None
+                        ) -> DynamicColoringState:
     """Apply an undirected edge update batch and repair the coloring.
 
     ``inserts`` / ``deletes`` are (k, 2) arrays of *original* vertex ids.
     Deletes are applied before inserts.  Returns a new state whose coloring
     is proper for the mutated graph; the input state is left untouched.
+    ``max_rounds`` defaults to the bound persisted on the state (the spec
+    the graph was created with); pass an explicit value to override one
+    batch without re-persisting it.
     """
+    if max_rounds is None:
+        max_rounds = state.max_rounds
     ins = _check_edges(inserts if inserts is not None else [], state.n,
                        "inserts")
     dels = _check_edges(deletes if deletes is not None else [], state.n,

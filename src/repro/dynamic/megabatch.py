@@ -1,0 +1,336 @@
+"""Megabatched multi-tenant stepping (DESIGN.md §13).
+
+``ColoringService.step`` used to loop tenants in Python, dispatching one
+jitted delta-apply + repair per graph per batch — per-dispatch overhead
+(trace lookup, host→device argument marshalling, device sync) multiplied by
+tenant count.  This module stacks same-shape tenants into a leading *slot*
+axis so one device dispatch applies wave j of every tenant's update plan and
+one dispatch repairs every tenant's coloring.
+
+Slot classes
+------------
+Two tenants can share a batch only if every jit-static / shape parameter of
+the stepping programs matches: ``slot_key`` collects them.  The service
+buckets tenants by this key; arrival/departure within a class never
+recompiles because the stacked batch is padded to a power-of-two capacity
+(duplicating slot 0 with no-op plans), so only O(log N) distinct batch
+shapes ever exist per class.
+
+Escape-to-retry
+---------------
+The per-tenant path has two data-dependent escapes the batched programs
+cannot take without punishing the whole class: the full-width fallback when
+a frontier overflows ``frontier_cap`` (under ``vmap`` both ``lax.cond``
+branches run for every slot) and the ``_run_with_retry`` color-cap doubling
+(a new C is a batch-wide recompile).  The mega kernels instead surface
+per-slot ``fail``/``escape`` flags; the host discards that slot's outputs,
+rebuilds its pre-round state from the previous round's stacked arrays, and
+redoes the batch through plain ``recolor_incremental`` — the exact code the
+per-tenant loop runs, so escaped tenants are bit-identical by construction.
+Non-escaped slots are bit-identical too: the same ``UpdatePlan`` drives both
+paths and the ``while_loop`` batching rule freezes finished slots, so each
+slot sees the exact scalar pass sequence.
+
+Deferred commit
+---------------
+Stacked device arrays are carried across batch rounds; per-tenant slices
+(one gather per tenant) happen once at the end, not per round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import frontier
+from repro.core.context import PassContext
+from repro.dynamic import delta
+from repro.dynamic import incremental as inc
+from repro.dynamic.incremental import DynamicColoringState
+
+
+def slot_key(state: DynamicColoringState) -> tuple:
+    """Every jit-static / shape parameter of the stepping programs.
+
+    Tenants agreeing on this key stack into one batch without retracing:
+    array shapes (n_pad, W, ovf_cap, frontier/delta caps), the
+    ``PassContext`` statics (n, C, n_chunks, forbidden_impl), and the
+    repair-round bound (static arg of the repair loop).
+    """
+    return (state.n, state.n_pad, int(state.ell.shape[1]),
+            int(state.ovf_src.shape[0]), state.C, state.n_chunks,
+            state.frontier_cap, state.delta_cap, state.forbidden_impl,
+            state.max_rounds)
+
+
+def _pow2(k: int) -> int:
+    return 1 << max(k - 1, 0).bit_length()
+
+
+# bound on how many batch rounds one fused dispatch spans: compile time
+# grows linearly with the unrolled round count, and the host only holds a
+# pre-CHUNK snapshot for escape redos, so an escape replays at most this
+# many batches per-tenant
+FUSE_ROUNDS = 8
+
+
+@functools.partial(jax.jit, static_argnames=("ctx", "cap", "max_rounds"))
+def _mega_step(ell_b, osrc_b, odst_b, pri_b, colors_b, U_r,
+               ovf_r, ell_r, ins_r, ctx, cap, max_rounds):
+    """ONE device dispatch advancing a whole slot class by a CHUNK of batch
+    rounds: for each round, every delete/insert wave of every slot, then
+    the megabatched repair loop.  Both the round count and the per-kind
+    wave counts are static leading dims the loops unroll over (one
+    compilation per distinct shape tuple — small for steady batch sizes,
+    and each dispatch replaces rounds × waves of them).  Inlines the same
+    ``delta._mega_*`` kernels ``apply_updates_mega`` dispatches one-by-one,
+    so results stay bit-identical to the per-tenant path.
+
+    A slot that escapes (insert spill finds the overflow buffer full, or a
+    repair escape — see ``_mega_compact_repair``) is dead for the rest of
+    the chunk: its repair is frozen via ``esc0`` so it cannot spin the
+    batched ``while_loop``, its arrays keep flowing through later wave
+    kernels as garbage, and the host discards them.  Returns
+    ``(ell, osrc, odst, colors, fail[r], rounds[r], defects[r], esc[r])``
+    with per-round leading dims; ``esc`` is cumulative (a dead slot stays
+    flagged), ``fail`` is per-round."""
+    n_slots = ell_b.shape[0]
+    dead = jnp.zeros((n_slots,), bool)
+    fails, rs, tots, escs = [], [], [], []
+    for r in range(U_r.shape[0]):
+        fail = jnp.zeros((n_slots,), bool)
+        for j in range(ovf_r.shape[1]):
+            osrc_b, odst_b = delta._mega_delete_overflow(osrc_b, odst_b,
+                                                         ovf_r[r, j])
+        for j in range(ell_r.shape[1]):
+            ell_b = delta._mega_delete_ell_wave(ell_b, ell_r[r, j])
+        if ins_r.shape[1]:
+            ss_b, ds_b = delta._mega_sort_overflow(osrc_b, odst_b)
+            for j in range(ins_r.shape[1]):
+                ell_b, osrc_b, odst_b, fj = delta._mega_insert_wave(
+                    ell_b, osrc_b, odst_b, ss_b, ds_b, ins_r[r, j])
+                fail = fail | fj
+        colors_b, r_b, tot_b, esc_b = frontier._repair_mega_loop(
+            ell_b, osrc_b, odst_b, pri_b, colors_b, U_r[r], dead | fail,
+            ctx, cap, max_rounds)
+        dead = dead | fail | esc_b
+        fails.append(fail)
+        rs.append(r_b)
+        tots.append(tot_b)
+        escs.append(dead)
+    return (ell_b, osrc_b, odst_b, colors_b, jnp.stack(fails),
+            jnp.stack(rs), jnp.stack(tots), jnp.stack(escs))
+
+
+def _stack_rounds(tensors, cap: int):
+    """Stack per-round ``(J_r, n_slots, cap, 2)`` wave tensors (one wave
+    kind, one chunk of batch rounds) into a ``(n_rounds, J, n_slots, cap,
+    2)`` chunk tensor; shorter rounds ride on all-FILL no-op waves.
+
+    The shared wave count J is padded up to a power of two: ``_mega_step``
+    unrolls over it, so every distinct (rounds, wave-count) shape tuple is
+    a separate (expensive — it contains the repair loops) compilation.
+    Random batches wobble the raw counts round to round; pow2 padding
+    collapses them onto a handful of stable jit keys at the price of a few
+    no-op waves."""
+    R = len(tensors)
+    _, n_slots, _, _ = tensors[0].shape
+    n = max(t.shape[0] for t in tensors)
+    n = _pow2(n) if n else 0
+    if not n:
+        return jnp.zeros((R, 0, n_slots, cap, 2), np.int32)
+    out = np.empty((R, n, n_slots, cap, 2), np.int32)
+    out[...] = delta.empty_wave(cap)          # broadcast-fill the padding
+    for r, t in enumerate(tensors):
+        out[r, :t.shape[0]] = t
+    return jnp.asarray(out)
+
+
+def step_group(states: Sequence[DynamicColoringState],
+               queues: Sequence[Sequence[Tuple]],
+               capacity: int = None,
+               ) -> Tuple[List[DynamicColoringState], List[dict]]:
+    """Drain every tenant's update-batch queue with megabatched dispatches.
+
+    ``states`` must share one ``slot_key``; ``queues[i]`` is tenant i's list
+    of ``(inserts, deletes)`` batches in original vertex ids, applied in
+    order.  The queues are drained in chunks of up to ``FUSE_ROUNDS`` batch
+    rounds, ONE fused ``_mega_step`` dispatch per chunk: round r of a chunk
+    applies the r-th batch of every tenant that has one and repairs every
+    coloring.  Slots that raise an escape flag anywhere in a chunk
+    (overflow-buffer full, frontier past cap, color cap exceeded) replay
+    that chunk's batches through ``recolor_incremental`` from their
+    pre-chunk state; if the replay changed the tenant's shapes (grown
+    buffer, doubled C) it leaves the batch and drains the rest of its queue
+    per-tenant ("solo").
+
+    Returns ``(new_states, outcomes)`` — ``outcomes[i]`` counts the path
+    each non-empty batch took: ``{"batched": .., "escaped": .., "solo": ..}``
+    (an escape charges every batch of its tenant's chunk to "escaped": the
+    whole chunk is replayed).  Empty batches are skipped without a version
+    bump, matching ``recolor_incremental``.
+    """
+    if len(states) != len(queues):
+        raise ValueError("one queue per state required")
+    k = len(states)
+    outcomes = [{"batched": 0, "escaped": 0, "solo": 0} for _ in range(k)]
+    if k == 0:
+        return [], outcomes
+    key = slot_key(states[0])
+    for st in states[1:]:
+        if slot_key(st) != key:
+            raise ValueError("step_group requires a single slot class; "
+                             f"got {slot_key(st)} vs {key}")
+    st0 = states[0]
+    n_pad, delta_cap = st0.n_pad, st0.delta_cap
+    ctx = PassContext(n=st0.n, n_pad=st0.n_pad, C=st0.C,
+                      n_chunks=st0.n_chunks,
+                      forbidden_impl=st0.forbidden_impl)
+
+    # validate + relabel host-side up front: a malformed batch must raise
+    # before any tenant's arrays are touched.  Wave planning itself happens
+    # per chunk round through ``delta.plan_group`` — ONE fused-key pass for
+    # the whole slot class instead of a sort per tenant.
+    rel_q: List[list] = []     # per tenant: relabeled (ins, dels) | None
+    raw_q: List[list] = []     # per tenant: validated original-id pairs
+    for st, q in zip(states, queues):
+        rels, raws = [], []
+        for ins, dels in q:
+            ins = inc._check_edges(ins if ins is not None else [],
+                                   st.n, "inserts")
+            dels = inc._check_edges(dels if dels is not None else [],
+                                    st.n, "deletes")
+            if len(ins) == 0 and len(dels) == 0:
+                rels.append(None)
+                raws.append(None)
+                continue
+            rels.append((st.perm[ins] if len(ins) else ins,
+                         st.perm[dels] if len(dels) else dels))
+            raws.append((ins, dels))
+        rel_q.append(rels)
+        raw_q.append(raws)
+
+    n_batch_rounds = max(len(q) for q in rel_q)
+    cap_slots = capacity if capacity is not None else _pow2(k)
+    if cap_slots < k:
+        raise ValueError(f"capacity {cap_slots} < group size {k}")
+    pad_idx = list(range(k)) + [0] * (cap_slots - k)
+    ell_b = jnp.stack([states[i].ell for i in pad_idx])
+    osrc_b = jnp.stack([states[i].ovf_src for i in pad_idx])
+    odst_b = jnp.stack([states[i].ovf_dst for i in pad_idx])
+    colors_b = jnp.stack([states[i].colors_dev for i in pad_idx])
+    pri_b = jnp.stack([states[i].pri for i in pad_idx])
+
+    cur = list(states)
+    # dirty[i]: cur[i]'s array fields are stale — its latest arrays live in
+    # the stacked batch and are sliced out at final commit
+    dirty = [False] * k
+    solo = [False] * k
+    empty = (np.zeros((0, 2), np.int32),      # no-op slot for plan_group
+             np.zeros((0, 2), np.int32))
+
+    # scalar bookkeeping (version bumps, pass counters) is deferred like the
+    # arrays: a dataclasses.replace per tenant per round is measurable host
+    # work at service rates, so batched rounds only accumulate here and fold
+    # into cur[i] once — at final commit, or on escape (the redo path needs
+    # the materialized state)
+    pend_ver = [0] * k
+    pend_last = [(0, 0)] * k     # (last_rounds, last_conflicts) of latest
+    pend_passes = [0] * k
+
+    def _fold(i):
+        if pend_ver[i]:
+            st = cur[i]
+            lr, lc = pend_last[i]
+            cur[i] = dataclasses.replace(
+                st, version=st.version + pend_ver[i], last_rounds=lr,
+                last_conflicts=lc, last_gather_passes=lr,
+                total_gather_passes=st.total_gather_passes + pend_passes[i])
+            pend_ver[i] = 0
+            pend_passes[i] = 0
+
+    for lo in range(0, n_batch_rounds, FUSE_ROUNDS):
+        chunk = range(lo, min(lo + FUSE_ROUNDS, n_batch_rounds))
+        for i in range(k):          # solo tenants drain per-tenant
+            if solo[i]:
+                for rnd in chunk:
+                    if rnd < len(rel_q[i]) \
+                            and rel_q[i][rnd] is not None:
+                        ins, dels = raw_q[i][rnd]
+                        cur[i] = inc.recolor_incremental(cur[i], ins, dels)
+                        outcomes[i]["solo"] += 1
+        act = [set(i for i in range(k)
+                   if not solo[i] and rnd < len(rel_q[i])
+                   and rel_q[i][rnd] is not None)
+               for rnd in chunk]
+        if not any(act):
+            continue
+        rounds = [delta.plan_group(
+            [rel_q[j][rnd] if (j < k and j in a) else empty
+             for j in pad_idx], delta_cap, n_pad)
+            for rnd, a in zip(chunk, act)]
+
+        prev = (ell_b, osrc_b, odst_b, colors_b)
+        U_r = jnp.asarray(np.stack([t[3] for t in rounds]))
+        ell_b, osrc_b, odst_b, colors_b, fail_r, r_r, tot_r, esc_r = \
+            _mega_step(ell_b, osrc_b, odst_b, pri_b, colors_b, U_r,
+                       _stack_rounds([t[0] for t in rounds], delta_cap),
+                       _stack_rounds([t[1] for t in rounds], delta_cap),
+                       _stack_rounds([t[2] for t in rounds], delta_cap),
+                       ctx, st0.frontier_cap, st0.max_rounds)
+        esc = np.asarray(fail_r) | np.asarray(esc_r)    # (rounds, slots)
+        r_h = np.asarray(r_r)
+        tot_h = np.asarray(tot_r)
+
+        for i in range(k):
+            mine = [ri for ri, a in enumerate(act) if i in a]
+            if not mine:
+                continue
+            if not esc[mine, i].any():
+                for ri in mine:
+                    passes = int(r_h[ri, i])
+                    pend_ver[i] += 1
+                    pend_last[i] = (passes, int(tot_h[ri, i]))
+                    pend_passes[i] += passes
+                    outcomes[i]["batched"] += 1
+                dirty[i] = True
+                continue
+            # escaped somewhere in the chunk: this slot's stacked arrays
+            # are garbage by contract.  Rebuild its pre-chunk state and
+            # replay the chunk's batches through the per-tenant retry path
+            # (bit-identical by construction — it IS the reference path).
+            _fold(i)
+            st = cur[i]
+            if dirty[i]:
+                st = dataclasses.replace(
+                    st, ell=prev[0][i], ovf_src=prev[1][i],
+                    ovf_dst=prev[2][i], colors_dev=prev[3][i])
+            for ri in mine:
+                ins, dels = raw_q[i][chunk[ri]]
+                st = inc.recolor_incremental(st, ins, dels)
+                outcomes[i]["escaped"] += 1
+            cur[i] = st
+            if slot_key(st) == key:
+                # shapes survived: scatter back and stay in the batch
+                ell_b = ell_b.at[i].set(st.ell)
+                osrc_b = osrc_b.at[i].set(st.ovf_src)
+                odst_b = odst_b.at[i].set(st.ovf_dst)
+                colors_b = colors_b.at[i].set(st.colors_dev)
+                dirty[i] = False
+            else:
+                # grown buffer / doubled C: can no longer ride this class
+                dirty[i] = False
+                solo[i] = True
+
+    # deferred commit: one slice + one replace per dirty tenant, once
+    for i in range(k):
+        _fold(i)
+        if dirty[i]:
+            cur[i] = dataclasses.replace(
+                cur[i], ell=ell_b[i], ovf_src=osrc_b[i], ovf_dst=odst_b[i],
+                colors_dev=colors_b[i])
+    return cur, outcomes

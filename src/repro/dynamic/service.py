@@ -1,4 +1,5 @@
-"""Long-lived coloring service over many mutating graphs (DESIGN.md §7.3).
+"""Long-lived coloring service over many mutating graphs (DESIGN.md §7.3,
+§13).
 
 ``ColoringService`` is the dynamic-graph analogue of ``serving/serve_loop``'s
 engine: it owns device-resident ``DynamicColoringState``s for many named
@@ -6,15 +7,28 @@ graphs, accepts edge-update batches through ``submit`` and applies them on
 ``step`` (one incremental repair per batch, one version bump each), and
 serves coloring-derived artifacts — the color classes consumed by vertex
 kernels and the dst-bucket edge coloring consumed by the GNN scatter path —
-from a version-keyed memo that mutation invalidates automatically.
+from a version-keyed, byte-budgeted LRU memo that mutation invalidates
+automatically.
+
+The submit/step queue is double-buffered: ``step`` swaps each tenant's
+pending list for an empty one *before* touching the device, so a submit
+racing a step lands cleanly in the next step instead of being silently
+dropped mid-drain.  ``step`` itself is megabatched (DESIGN.md §13): tenants
+sharing a ``megabatch.slot_key`` are stacked and advanced by ONE device
+dispatch per update wave / repair loop instead of one per tenant, with
+per-slot escape flags routing the rare overflowing tenant back through the
+per-tenant retry path.
 
 Queries between steps are cheap: colors and artifacts always reflect the
 last stepped version, never a half-applied batch.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import sys
 import time
+from collections.abc import Mapping
 from typing import Optional
 
 import numpy as np
@@ -22,6 +36,7 @@ import numpy as np
 from repro.core import coloring as col
 from repro.core import schedule
 from repro.dynamic import delta
+from repro.dynamic import megabatch
 from repro.dynamic.incremental import (DynamicColoringState, _check_edges,
                                        recolor_incremental)
 from repro.graphs.csr import CSRGraph, to_edge_list
@@ -34,11 +49,111 @@ class UpdateBatch:
     deletes: Optional[np.ndarray]
 
 
+def _nbytes(obj) -> int:
+    """Recursive size estimate for cache admission (host + device arrays
+    report ``nbytes``; containers add a small fixed overhead)."""
+    if hasattr(obj, "nbytes"):
+        return int(obj.nbytes)
+    if isinstance(obj, (list, tuple)):
+        return sum(_nbytes(o) for o in obj) + 64
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return sum(_nbytes(getattr(obj, f.name))
+                   for f in dataclasses.fields(obj)) + 64
+    return sys.getsizeof(obj, 64)
+
+
+class ArtifactCache:
+    """Version-keyed LRU artifact memo with a byte budget (DESIGN.md §13).
+
+    Entries are ``(name, kind) -> (version, artifact, nbytes)``.  A hit
+    requires the stored version to match the tenant's current state version
+    (mutation invalidates implicitly); any hit refreshes recency.  Insertion
+    evicts least-recently-used entries until the budget holds — except the
+    entry just inserted, so the artifact being handed to the caller is never
+    dropped in the same breath even when it alone exceeds the budget.
+    Because a stale entry can never be read again (its version can't come
+    back — ``restore`` re-versions above the current version precisely to
+    keep this true), stale entries age out of the LRU order first.
+    """
+
+    def __init__(self, budget_bytes: int):
+        self.budget_bytes = int(budget_bytes)
+        self._d: "collections.OrderedDict[tuple, tuple]" = \
+            collections.OrderedDict()
+        self._bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def get(self, key: tuple, version: int):
+        """The cached artifact for ``key`` at ``version``, else None."""
+        hit = self._d.get(key)
+        if hit is None or hit[0] != version:
+            return None
+        self._d.move_to_end(key)
+        return hit[1]
+
+    def put(self, key: tuple, version: int, obj) -> list:
+        """Admit ``obj``; returns the list of evicted keys."""
+        old = self._d.pop(key, None)
+        if old is not None:
+            self._bytes -= old[2]
+        nb = _nbytes(obj)
+        self._d[key] = (version, obj, nb)
+        self._bytes += nb
+        evicted = []
+        while self._bytes > self.budget_bytes and len(self._d) > 1:
+            k, (_, _, b) = self._d.popitem(last=False)
+            self._bytes -= b
+            evicted.append(k)
+        return evicted
+
+    def drop_name(self, name: str) -> None:
+        for k in [k for k in self._d if k[0] == name]:
+            self._bytes -= self._d.pop(k)[2]
+
+
+class StepStats(Mapping):
+    """Lazy per-graph repair stats returned by ``ColoringService.step``.
+
+    Building a stats dict hosts the colors (a blocking device→host copy +
+    color count), which used to sit inside the step's timed region and
+    pollute ``service.step_ms``.  Values are computed on first access and
+    cached; iteration and ``len`` stay free.
+    """
+
+    def __init__(self, states: dict):
+        self._states = dict(states)
+        self._cache: dict = {}
+
+    def __getitem__(self, name: str) -> dict:
+        if name not in self._cache:
+            self._cache[name] = self._states[name].summary()
+        return self._cache[name]
+
+    def __iter__(self):
+        return iter(self._states)
+
+    def __len__(self) -> int:
+        return len(self._states)
+
+    def __repr__(self) -> str:
+        return f"StepStats({sorted(self._states)})"
+
+
 class ColoringService:
-    def __init__(self, **default_opts):
+    def __init__(self, *, memo_budget_mb: float = 256.0,
+                 megabatch: bool = True, megabatch_min: int = 2,
+                 **default_opts):
         self._states: dict[str, DynamicColoringState] = {}
         self._pending: dict[str, list[UpdateBatch]] = {}
-        self._memo: dict[tuple[str, str], tuple[int, object]] = {}
+        self._memo = ArtifactCache(int(memo_budget_mb * (1 << 20)))
+        self._megabatch = bool(megabatch)
+        self._megabatch_min = max(2, int(megabatch_min))
         self._opts = dict(default_opts)
 
     # -- graph lifecycle ----------------------------------------------------
@@ -71,7 +186,10 @@ class ColoringService:
         self._state(name)
         del self._states[name]
         del self._pending[name]
-        self._memo = {k: v for k, v in self._memo.items() if k[0] != name}
+        self._memo.drop_name(name)
+        # drop per-tenant observability too: a tenant re-added under this
+        # name must not inherit the departed tenant's latency percentiles
+        obs_metrics.remove("service.step_ms", graph=name)
 
     def graphs(self) -> list[str]:
         return sorted(self._states)
@@ -80,6 +198,32 @@ class ColoringService:
         if name not in self._states:
             raise KeyError(f"unknown graph {name!r}; have {self.graphs()}")
         return self._states[name]
+
+    # -- snapshot / rollback ------------------------------------------------
+
+    def snapshot(self, name: str) -> DynamicColoringState:
+        """The tenant's current immutable state; hold it, keep stepping,
+        and ``restore`` later to roll back."""
+        return self._state(name)
+
+    def restore(self, name: str, state: DynamicColoringState) -> int:
+        """Roll ``name`` back to a snapshot; returns the new version.
+
+        The restored state is re-versioned *above* the tenant's current
+        version: version numbers must never repeat with different contents,
+        or the artifact memo would serve stale entries as fresh.
+        """
+        cur = self._state(name)
+        if not isinstance(state, DynamicColoringState):
+            raise TypeError("restore expects a DynamicColoringState")
+        if state.n != cur.n:
+            raise ValueError(
+                f"snapshot is for a {state.n}-vertex graph; "
+                f"{name!r} has {cur.n} vertices")
+        st = dataclasses.replace(
+            state, version=max(cur.version, state.version) + 1)
+        self._states[name] = st
+        return st.version
 
     # -- submit/step --------------------------------------------------------
 
@@ -100,26 +244,71 @@ class ColoringService:
         self._state(name)
         return len(self._pending[name])
 
-    def step(self, name: Optional[str] = None) -> dict[str, dict]:
-        """Drain pending batches (one graph, or all); returns per-graph
-        repair stats of the last applied batch."""
+    def step(self, name: Optional[str] = None) -> StepStats:
+        """Drain pending batches (one graph, or all); returns lazy
+        per-graph repair stats of the last applied batch.
+
+        Tenants sharing a slot class (same shapes/statics, see
+        ``megabatch.slot_key``) are advanced together: one device dispatch
+        per update wave and one per repair loop for the whole group.
+        ``service.step_ms{graph=..}`` times repair dispatch + device sync
+        only — stats decoding happens lazily on access.
+        """
         names = [name] if name is not None else self.graphs()
-        out = {}
         for nm in names:
-            t0 = time.perf_counter()
-            st = self._state(nm)
-            n_batches = len(self._pending[nm])
-            for batch in self._pending[nm]:
-                st = recolor_incremental(st, batch.inserts, batch.deletes)
+            self._state(nm)
+        # double-buffer swap BEFORE device work: a submit racing this step
+        # lands in the fresh list and is applied by the next step
+        drained = {nm: self._pending[nm] for nm in names}
+        for nm in names:
             self._pending[nm] = []
+
+        busy = [nm for nm in names if drained[nm]]
+        groups: dict[tuple, list[str]] = {}
+        for nm in busy:
+            groups.setdefault(megabatch.slot_key(self._states[nm]),
+                              []).append(nm)
+
+        for key, members in groups.items():
+            if self._megabatch and len(members) >= self._megabatch_min:
+                self._step_mega(members, drained)
+            else:
+                for nm in members:
+                    self._step_loop(nm, drained[nm])
+        return StepStats({nm: self._states[nm] for nm in names})
+
+    def _step_loop(self, nm: str, batches: list) -> None:
+        """Per-tenant path: one dispatch per batch (repair bound comes from
+        the state's persisted ``max_rounds``)."""
+        t0 = time.perf_counter()
+        st = self._states[nm]
+        for batch in batches:
+            st = recolor_incremental(st, batch.inserts, batch.deletes)
+        st.colors_dev.block_until_ready()
+        self._states[nm] = st
+        obs_metrics.histogram("service.step_ms", graph=nm).observe(
+            (time.perf_counter() - t0) * 1e3)
+        obs_metrics.counter("service.mega", outcome="loop").inc(len(batches))
+
+    def _step_mega(self, members: list, drained: dict) -> None:
+        """Megabatched path: every member advances in one stacked dispatch
+        per wave/repair round.  Each member observes the group wall time —
+        that IS the latency a tenant experiences for a batched step."""
+        t0 = time.perf_counter()
+        states = [self._states[nm] for nm in members]
+        queues = [[(b.inserts, b.deletes) for b in drained[nm]]
+                  for nm in members]
+        new_states, outcomes = megabatch.step_group(states, queues)
+        for st in new_states:
+            st.colors_dev.block_until_ready()
+        dt = (time.perf_counter() - t0) * 1e3
+        for nm, st, oc in zip(members, new_states, outcomes):
             self._states[nm] = st
-            out[nm] = st.summary()   # hosts the colors => blocks on device
-            # per-tenant step latency (p50/p99 via step_latency(name));
-            # zero-batch steps are ~free and would drown the percentiles
-            if n_batches:
-                obs_metrics.histogram("service.step_ms", graph=nm).observe(
-                    (time.perf_counter() - t0) * 1e3)
-        return out
+            obs_metrics.histogram("service.step_ms", graph=nm).observe(dt)
+            for outcome, cnt in oc.items():
+                if cnt:
+                    obs_metrics.counter("service.mega",
+                                        outcome=outcome).inc(cnt)
 
     def step_latency(self, name: str) -> dict:
         """Latency summary of this tenant's non-empty ``step`` calls:
@@ -164,12 +353,14 @@ class ColoringService:
     def _memoized(self, name: str, kind: str, build):
         st = self._state(name)
         key = (name, kind)
-        hit = self._memo.get(key)
-        if hit is not None and hit[0] == st.version:
+        hit = self._memo.get(key, st.version)
+        if hit is not None:
             obs_metrics.counter("service.memo", kind=kind,
                                 outcome="hit").inc()
-            return hit[1]
+            return hit
         obs_metrics.counter("service.memo", kind=kind, outcome="miss").inc()
         art = build(st)
-        self._memo[key] = (st.version, art)
+        for _, ekind in self._memo.put(key, st.version, art):
+            obs_metrics.counter("service.memo", kind=ekind,
+                                outcome="evict").inc()
         return art

@@ -169,6 +169,18 @@ def snapshot() -> dict:
             "histograms": {k: h.summary() for k, h in hists}}
 
 
+def remove(name: str, **labels) -> None:
+    """Drop one metric identity (counter and/or histogram) from the
+    registry.  ``ColoringService.remove_graph`` uses this so a tenant
+    re-added under the same name starts with fresh latency percentiles
+    instead of inheriting the departed tenant's (DESIGN.md §13); absent
+    identities are a no-op."""
+    key = qualified(name, **labels)
+    with _LOCK:
+        _COUNTERS.pop(key, None)
+        _HISTOGRAMS.pop(key, None)
+
+
 def reset() -> None:
     """Drop every metric (tests; a long-lived process never needs this)."""
     with _LOCK:

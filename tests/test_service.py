@@ -1,0 +1,249 @@
+"""ColoringService megabatched stepping + lifecycle semantics (DESIGN.md
+§13): the stacked fast path must be bit-identical to the per-tenant loop
+(including when a tenant escapes to the retry path), planning must be
+bit-identical to per-tenant planning, and the service's cache/metrics
+lifecycle must not leak state across remove/re-add or rollback."""
+import numpy as np
+import pytest
+
+from repro.core import coloring as col
+from repro.dynamic import (ArtifactCache, ColoringService, slot_key,
+                           state_to_csr)
+from repro.dynamic import delta
+from repro.graphs import generators as gen
+from repro.obs import metrics as obs_metrics
+
+# One slot class across tenants: explicit shape knobs + ell_cap below the
+# max degree (see megabatch.slot_key).  Small shapes keep the fused-step
+# compile fast in CI.
+OPTS = dict(seed=0, n_chunks=2, ell_cap=6, C=16, ovf_cap=64, delta_cap=32,
+            frontier_frac=0.5)
+
+
+def _pair(n_tenants=3, n=64, **over):
+    """(loop_svc, mega_svc) with identically-seeded same-shape tenants."""
+    opts = {**OPTS, **over}
+    pair = []
+    for mega in (False, True):
+        svc = ColoringService(megabatch=mega, **opts)
+        for i in range(n_tenants):
+            svc.add_graph(f"g{i}", gen.erdos_renyi(n, 5.0, seed=i))
+        pair.append(svc)
+    keys = {slot_key(pair[1].snapshot(f"g{i}")) for i in range(n_tenants)}
+    assert len(keys) == 1, keys
+    return pair
+
+
+def _submit_stream(svcs, n_tenants, n, steps, bpp=2, seed=3):
+    """Submit identical random batches to every service, step, repeat."""
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        for t in range(n_tenants):
+            for _b in range(bpp):
+                ins = rng.integers(0, n, (6, 2))
+                ins = ins[ins[:, 0] != ins[:, 1]]
+                dels = rng.integers(0, n, (3, 2))
+                for svc in svcs:
+                    svc.submit(f"g{t}", inserts=ins, deletes=dels)
+        for svc in svcs:
+            svc.step()
+
+
+def _assert_identical(loop_svc, mega_svc, n_tenants):
+    for i in range(n_tenants):
+        nm = f"g{i}"
+        assert np.array_equal(loop_svc.colors(nm), mega_svc.colors(nm)), nm
+        assert loop_svc.version(nm) == mega_svc.version(nm), nm
+        st = mega_svc.snapshot(nm)
+        assert col.is_proper(state_to_csr(st), st.colors), nm
+
+
+# --------------------------------------------------------------------------
+# megabatched step: bit-identical to the per-tenant loop
+# --------------------------------------------------------------------------
+
+def test_mega_step_bit_identical_to_loop():
+    n_tenants, n = 3, 64
+    loop_svc, mega_svc = _pair(n_tenants, n)
+    bat0 = obs_metrics.counter_value("service.mega", outcome="batched")
+    _submit_stream([loop_svc, mega_svc], n_tenants, n, steps=3)
+    _assert_identical(loop_svc, mega_svc, n_tenants)
+    # the fast path actually ran (and charged its outcome counter)
+    assert obs_metrics.counter_value("service.mega",
+                                     outcome="batched") > bat0
+
+
+def test_mega_escape_bit_identical_to_loop():
+    """A tenant blowing past its color cap escapes the stacked dispatch to
+    the per-tenant retry path mid-group; every tenant must still land
+    bit-identical to the loop service."""
+    n_tenants, n = 3, 64
+    loop_svc, mega_svc = _pair(n_tenants, n, C=8)
+    esc0 = (obs_metrics.counter_value("service.mega", outcome="escaped")
+            + obs_metrics.counter_value("service.mega", outcome="solo"))
+    # K_12 on tenant 0 needs 12 colors > C=8: cap-doubling retry territory
+    k = 12
+    ii, jj = np.meshgrid(np.arange(k), np.arange(k))
+    clique = np.stack([ii[ii < jj], jj[ii < jj]], 1)
+    rng = np.random.default_rng(5)
+    others = [rng.integers(0, n, (6, 2)) for _ in range(1, n_tenants)]
+    for svc in (loop_svc, mega_svc):
+        svc.submit("g0", inserts=clique)
+        for t in range(1, n_tenants):
+            svc.submit(f"g{t}", inserts=others[t - 1])
+    loop_svc.step()
+    mega_svc.step()
+    _assert_identical(loop_svc, mega_svc, n_tenants)
+    assert mega_svc.snapshot("g0").n_colors >= k
+    assert (obs_metrics.counter_value("service.mega", outcome="escaped")
+            + obs_metrics.counter_value("service.mega",
+                                        outcome="solo")) > esc0
+
+
+def test_megabatch_min_falls_back_to_loop():
+    svc = ColoringService(megabatch=True, megabatch_min=4, **OPTS)
+    for i in range(2):
+        svc.add_graph(f"g{i}", gen.erdos_renyi(64, 5.0, seed=i))
+    n0 = obs_metrics.counter_value("service.mega", outcome="loop")
+    for i in range(2):
+        svc.submit(f"g{i}", inserts=[[0, 9]])
+    svc.step()
+    assert obs_metrics.counter_value("service.mega",
+                                     outcome="loop") == n0 + 2
+
+
+# --------------------------------------------------------------------------
+# group planning: bit-identical to per-tenant plan_updates
+# --------------------------------------------------------------------------
+
+def test_plan_group_matches_plan_updates():
+    rng = np.random.default_rng(17)
+    cap, n_pad = 8, 64
+    for trial in range(25):
+        n_slots = int(rng.integers(1, 5))
+        batches = []
+        for _ in range(n_slots):
+            k_i, k_d = rng.integers(0, 30, 2)      # over-cap waves included
+            ins = rng.integers(0, n_pad, (k_i, 2)).astype(np.int32)
+            dels = rng.integers(0, n_pad, (k_d, 2)).astype(np.int32)
+            batches.append((ins, dels))
+        ovf_w, ell_w, ins_w, touched = delta.plan_group(batches, cap, n_pad)
+        for b, (ins, dels) in enumerate(batches):
+            ref = delta.plan_updates(ins, dels, cap, n_pad)
+            for got, want in ((ovf_w, ref.ovf_del), (ell_w, ref.ell_del),
+                              (ins_w, ref.ins)):
+                for j in range(got.shape[0]):
+                    exp = want[j] if j < len(want) else delta.empty_wave(cap)
+                    assert np.array_equal(got[j, b], exp), (trial, b, j)
+            assert np.array_equal(touched[b], ref.touched), (trial, b)
+
+
+# --------------------------------------------------------------------------
+# lifecycle: remove/re-add, snapshot/rollback, eviction, max_rounds
+# --------------------------------------------------------------------------
+
+def test_remove_readd_clears_tenant_metrics():
+    # metrics are process-global and keyed by graph name: use a name no
+    # other test steps, so the absolute count asserts can't be polluted
+    nm = "readd-metrics-tenant"
+    svc = ColoringService(**OPTS)
+    svc.add_graph(nm, gen.mesh2d(8, 8))
+    svc.submit(nm, inserts=[[0, 9]])
+    svc.step(nm)
+    assert svc.step_latency(nm)["count"] == 1
+    svc.remove_graph(nm)
+    svc.add_graph(nm, gen.mesh2d(8, 8))
+    # the re-added tenant must not inherit the departed tenant's histogram
+    assert svc.step_latency(nm)["count"] == 0
+
+
+def test_snapshot_rollback_reversions_above_current():
+    svc = ColoringService(**OPTS)
+    svc.add_graph("g", gen.mesh2d(8, 8))
+    snap = svc.snapshot("g")
+    colors0 = svc.colors("g").copy()
+    sched0 = svc.vertex_schedule("g")
+
+    for _ in range(2):
+        svc.submit("g", inserts=[[0, 9], [3, 17]])
+        svc.step("g")
+    v_stepped = svc.version("g")
+    assert v_stepped == snap.version + 2
+
+    v_restored = svc.restore("g", snap)
+    # re-versioned ABOVE everything seen: a version number may never repeat
+    # with different contents or the memo would serve stale artifacts
+    assert v_restored > v_stepped
+    np.testing.assert_array_equal(svc.colors("g"), colors0)
+    # memoized artifact from the snapshot's ORIGINAL version is not served
+    # for the restored state; it is rebuilt under the new version
+    sched1 = svc.vertex_schedule("g")
+    assert sched1 is not sched0
+    assert svc.vertex_schedule("g") is sched1
+
+    with pytest.raises(ValueError):
+        svc.restore("g", _other_size_snap(svc))    # wrong graph size
+    with pytest.raises(TypeError):
+        svc.restore("g", object())
+
+
+def _other_size_snap(svc):
+    tmp = ColoringService(**OPTS)
+    tmp.add_graph("t", gen.mesh2d(4, 4))
+    return tmp.snapshot("t")
+
+
+def test_artifact_cache_eviction_semantics():
+    cache = ArtifactCache(budget_bytes=2048)
+    a = np.zeros(300, np.int64)                    # 2400 B: alone over budget
+    # the just-inserted artifact is never evicted in the same breath, even
+    # when it alone exceeds the budget
+    assert cache.put(("g", "a"), 0, a) == []
+    assert len(cache) == 1 and cache.get(("g", "a"), 0) is not None
+    # a second insert evicts the LRU first entry
+    b = np.zeros(200, np.int64)
+    assert cache.put(("g", "b"), 0, b) == [("g", "a")]
+    assert cache.get(("g", "a"), 0) is None
+    assert cache.get(("g", "b"), 0) is not None
+    # version mismatch is a miss, not a stale hit
+    assert cache.get(("g", "b"), 1) is None
+    cache.drop_name("g")
+    assert len(cache) == 0 and cache.nbytes == 0
+
+
+def test_service_memo_eviction_counter_and_requery():
+    svc = ColoringService(memo_budget_mb=1e-4, **OPTS)   # ~100 B budget
+    svc.add_graph("g", gen.mesh2d(8, 8))
+    ev0 = obs_metrics.counter_value("service.memo", kind="vertex_schedule",
+                                    outcome="evict")
+    sched = svc.vertex_schedule("g")               # admitted despite budget
+    assert all(np.array_equal(a, b)
+               for a, b in zip(sched, svc.vertex_schedule("g")))
+    svc.edge_colors("g")        # evicts the schedule (and csr along the way)
+    assert obs_metrics.counter_value("service.memo", kind="vertex_schedule",
+                                     outcome="evict") == ev0 + 1
+    # evicted artifact is simply rebuilt on re-query — same contents
+    again = svc.vertex_schedule("g")
+    assert all(np.array_equal(a, b) for a, b in zip(sched, again))
+
+
+def test_max_rounds_persisted_from_spec():
+    svc = ColoringService(max_rounds=1, **OPTS)
+    svc.add_graph("g", gen.mesh2d(8, 8))
+    assert svc.snapshot("g").max_rounds == 1
+    svc.submit("g", inserts=[[0, 9], [1, 10]])
+    svc.step("g")
+    # the persisted bound caps every subsequent incremental repair
+    assert svc.snapshot("g").last_rounds <= 1
+
+
+def test_step_stats_lazy_mapping():
+    svc = ColoringService(**OPTS)
+    for i in range(2):
+        svc.add_graph(f"g{i}", gen.mesh2d(8, 8))
+    svc.submit("g0", inserts=[[0, 9]])
+    stats = svc.step()
+    assert set(stats) == {"g0", "g1"} and len(stats) == 2
+    d = stats["g0"]
+    assert d["version"] == 1 and "rounds" in d
+    assert stats["g0"] is d                        # computed once, cached
