@@ -13,17 +13,36 @@
 #                     every push.
 #   make bench        paper-scale benchmark run (small suite)
 #   make bench-report roofline achieved-vs-peak table from the JSON dumps
+#   make chaos        fault-injection sweep (DESIGN.md §14.5): runs
+#                     tests/test_chaos.py once per fault class in
+#                     CHAOS_FAULTS under both kernel backends; dead-letter
+#                     queues are exported to deadletters/ (CI artifacts)
 
 PYTHONPATH := src
 export PYTHONPATH
 
 SCALE ?= tiny
 PEAK_GBS ?= 50
+CHAOS_FAULTS ?= kernel.fallback cap.exhaust ovf.exhaust color.corrupt \
+	service.step service.submit
+CHAOS_BACKENDS ?= pallas_interpret jnp
 
-.PHONY: test bench-smoke bench bench-report
+.PHONY: test bench-smoke bench bench-report chaos
 
 test:
 	python -m pytest -x -q
+
+chaos:
+	@mkdir -p deadletters
+	@for f in $(CHAOS_FAULTS); do \
+	  for b in $(CHAOS_BACKENDS); do \
+	    echo "=== chaos: $$f ($$b) ==="; \
+	    REPRO_FAULTS="$$f:p=0.5:seed=7" \
+	    REPRO_KERNEL_BACKEND="$$b" \
+	    REPRO_DEADLETTER_DIR=deadletters \
+	    python -m pytest tests/test_chaos.py -q || exit 1; \
+	  done; \
+	done
 
 bench-smoke:
 	python -m benchmarks.run --scale=$(SCALE) --json

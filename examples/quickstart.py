@@ -96,3 +96,24 @@ print(f"tenant0 v{svc.version('tenant0')}: "
       f"{stats['tenant0']['colors']} colors, "
       f"{len(svc.vertex_schedule('tenant0'))} schedule classes "
       f"(p50 step {svc.step_latency('tenant0')['p50']:.1f}ms)")
+
+# 12. self-healing: steps are transactional — an error rolls the tenant
+#     back bit-exactly and requeues the batch; repeated failures quarantine
+#     it (last-good coloring still served, unapplied batches preserved in a
+#     dead-letter queue) and heal() replays the letters once the cause is
+#     gone, bit-identical to a run that never failed (DESIGN.md §14)
+from repro.resilience import faults
+svc.submit("tenant2", inserts=[[1, 5], [2, 8]])
+with faults.inject("service.step:p=1"):   # rehearse a step-path failure
+    svc.step("tenant2")                   # rollback 1: committed state untouched
+    svc.step("tenant2")                   # rollback 2: tenant quarantined
+q = svc.quarantined("tenant2")
+letters = svc.dead_letters("tenant2")
+print(f"tenant2 quarantined: reason={q.reason}, "
+      f"{sum(d.n_edges() for d in letters)} edges dead-lettered")
+svc.heal("tenant2")                       # replay letters, verify, re-admit
+assert svc.quarantined("tenant2") is None
+assert col.is_proper(svc.graph("tenant2"), svc.colors("tenant2"))
+print(f"tenant2 healed: v{svc.version('tenant2')}, "
+      f"{stats['tenant2']['colors']} -> "
+      f"{int(svc.colors('tenant2').max()) + 1} colors, proper again")

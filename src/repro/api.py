@@ -79,6 +79,15 @@ class ColoringSpec:
     trace: bool = False            # attach an obs.RunTrace to result.trace
                                    # (zero device overhead when False; also
                                    # forced by obs.trace() / REPRO_TRACE=1)
+    max_cap_retries: Optional[int] = None  # color-cap doubling budget per
+                                   # solve (None: unbounded, the legacy
+                                   # behavior); exhaustion raises
+                                   # CapRetryExhausted -> degradation
+                                   # ladder in the dynamic stack (§14)
+    max_ovf_growth: Optional[int] = None   # mode="incremental": overflow
+                                   # buffer growth budget per batch (None:
+                                   # unbounded); exhaustion raises
+                                   # OvfGrowthExhausted -> ladder (§14)
 
     # -- resolution / validation -------------------------------------------
 
@@ -106,6 +115,14 @@ class ColoringSpec:
             raise ValueError(f"C must be >= 1 or None (got {self.C})")
         if self.ell_cap < 1:
             raise ValueError(f"ell_cap must be >= 1 (got {self.ell_cap})")
+        if self.max_cap_retries is not None and self.max_cap_retries < 0:
+            raise ValueError(
+                f"max_cap_retries must be >= 0 or None "
+                f"(got {self.max_cap_retries})")
+        if self.max_ovf_growth is not None and self.max_ovf_growth < 0:
+            raise ValueError(
+                f"max_ovf_growth must be >= 0 or None "
+                f"(got {self.max_ovf_growth})")
         if not 0.0 < self.frontier_frac <= 1.0:
             raise ValueError(
                 f"frontier_frac must be in (0, 1] (got {self.frontier_frac})")

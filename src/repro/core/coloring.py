@@ -52,6 +52,8 @@ from repro.core.context import (DEFAULT_FORBIDDEN_IMPL, PassContext,
                                 resolve_impl)
 from repro.graphs.csr import CSRGraph, FILL, from_edges, to_edge_list, to_ell
 from repro import obs
+from repro.resilience import faults
+from repro.resilience.errors import CapRetryExhausted
 
 MAX_ROUNDS_TRACE = 64  # fixed-size conflict trace (while_loop-friendly)
 
@@ -76,6 +78,9 @@ class ColoringResult:
     final_C: int = 0               # color cap actually used (after doublings)
     retries: int = 0               # cap-doubling re-runs (0 = first cap fit)
     distance: int = 1              # coloring distance (2 = native two-hop)
+    degrade_rung: int = 0          # resilience ladder rung that produced
+                                   # the colors (0 = normal path; see
+                                   # resilience/ladder.RUNG_NAMES)
     # the resolved repro.api.ColoringSpec that produced this result, echoed
     # by api.color for reproducibility (None on direct engine calls); typed
     # as object because this module must not import repro.api
@@ -537,7 +542,8 @@ def _jp_loop(src, dst, pri, n, C, max_rounds, impl=DEFAULT_FORBIDDEN_IMPL):
 # public API
 # --------------------------------------------------------------------------
 
-def _run_with_retry(run, C: int, *, engine: str = ""):
+def _run_with_retry(run, C: int, *, engine: str = "",
+                    max_retries: Optional[int] = None):
     """Run ``run(C)``, doubling the color cap until it fits.
 
     ``run`` returns any tuple whose LAST element is the boolean overflow
@@ -546,14 +552,25 @@ def _run_with_retry(run, C: int, *, engine: str = ""):
     — they differ only in the closure they pass.  Returns
     (run output, final C, number of cap-doubling retries).
 
+    ``max_retries`` bounds the doublings (``ColoringSpec.max_cap_retries``):
+    a pathological graph/cap pair raises ``CapRetryExhausted`` instead of
+    spinning, and the dynamic stack degrades through its ladder (DESIGN.md
+    §14.2).  ``None`` keeps the legacy unbounded loop bit-exactly.  The
+    ``cap.exhaust`` fault site rides here too — host-side, before the
+    dispatch, so faults-off runs compile byte-identical programs.
+
     Observability rides here precisely because every engine funnels through:
     each attempt is a ``solve`` phase on the current tracer (blocking on the
     outputs so the wall time is real), and each doubling bumps the
-    ``engine.cap_retry{engine=...}`` counter.  With no tracer the only
-    addition over the pre-obs loop is one None check per attempt.
+    ``engine.cap_retry{engine=...}`` counter.  With no tracer and no armed
+    faults the only addition over the pre-obs loop is two None checks per
+    attempt.
     """
     retries = 0
     while True:
+        if faults.fires("cap.exhaust", engine=engine):
+            raise CapRetryExhausted(engine=engine, C=C, retries=retries,
+                                    budget=max_retries, forced=True)
         tracer = obs.current_tracer()
         if tracer is None:
             out = run(C)
@@ -562,6 +579,9 @@ def _run_with_retry(run, C: int, *, engine: str = ""):
                 out = jax.block_until_ready(run(C))
         if not bool(out[-1]):
             return out, C, retries
+        if max_retries is not None and retries >= max_retries:
+            raise CapRetryExhausted(engine=engine, C=C, retries=retries,
+                                    budget=max_retries)
         C *= 2  # rare: color cap exceeded -> retry with doubled cap
         retries += 1
         obs.metrics.counter("engine.cap_retry",
@@ -618,7 +638,7 @@ def _rsoc_engine(g: CSRGraph, spec) -> ColoringResult:
     out, final_C, retries = _run_with_retry(
         _prob_runner(_rsoc_loop, prob, spec.n_chunks, spec.max_rounds, impl,
                      trace=tracer is not None),
-        prob.C, engine="rsoc")
+        prob.C, engine="rsoc", max_retries=spec.max_cap_retries)
     colors, r, trace, ftrace, tot = _loop_outputs(out, tracer is not None)
     _report_frontier(tracer, ftrace, r)
     conf, truncated = _trim_trace(trace, r)
@@ -644,7 +664,7 @@ def _cat_engine(g: CSRGraph, spec) -> ColoringResult:
                        spec.relabel)
     (colors, r, trace, tot, _), final_C, retries = _run_with_retry(
         _prob_runner(_cat_loop, prob, spec.n_chunks, spec.max_rounds, impl),
-        prob.C, engine="cat")
+        prob.C, engine="cat", max_retries=spec.max_cap_retries)
     conf, truncated = _trim_trace(trace, r)
     # CAT's frontier IS its conflict count: a round re-colors exactly the
     # defect set U detected by the previous phase B, so no extra device
@@ -724,7 +744,8 @@ def _jp_engine(g: CSRGraph, spec) -> ColoringResult:
                           .astype(np.int32))
     (colors, r, _), Cv, retries = _run_with_retry(
         lambda Cv: _jp_loop(src, dst, pri, n, Cv, spec.max_rounds, impl),
-        _pick_C(g, spec.C), engine="jp")
+        _pick_C(g, spec.C), engine="jp",
+        max_retries=spec.max_cap_retries)
     colors = np.asarray(colors)
     if (colors < 0).any():
         # never silent: a JP round bound that is too small used to return a

@@ -285,13 +285,15 @@ def _prepare_native(g: CSRGraph, seed: int, n_chunks: int, C: Optional[int],
 
 def _run_d2_with_retry(prob: col.ColoringProblem, rows_mask, n_chunks: int,
                        cap: int, max_rounds: int, impl: str,
-                       engine: str = "rsoc_d2", trace: bool = False):
+                       engine: str = "rsoc_d2", trace: bool = False,
+                       max_retries=None):
     def run(C):
         ctx = PassContext.for_problem(prob, n_chunks=n_chunks, C=C,
                                       forbidden_impl=impl, trace=trace)
         return _d2_loop(prob.ell, prob.pri, rows_mask, ctx, cap,
                         max_rounds)
-    return col._run_with_retry(run, prob.C, engine=engine)
+    return col._run_with_retry(run, prob.C, engine=engine,
+                               max_retries=max_retries)
 
 
 def _d2_result(colors, r, trace, tot, final_C, retries,
@@ -317,7 +319,8 @@ def _distance2_engine(g: CSRGraph, spec) -> col.ColoringResult:
     rows_mask = jnp.arange(prob.n_pad) < prob.n
     out, final_C, retries = _run_d2_with_retry(
         prob, rows_mask, spec.n_chunks, cap, spec.max_rounds, impl,
-        engine="rsoc_d2", trace=tracer is not None)
+        engine="rsoc_d2", trace=tracer is not None,
+        max_retries=spec.max_cap_retries)
     colors, r, trace, ftrace, tot = col._loop_outputs(out, tracer is not None)
     col._report_frontier(tracer, ftrace, r, cap=cap)
     conf, truncated = col._trim_trace(trace, r)
@@ -350,7 +353,8 @@ def _bipartite_partial_engine(g: CSRGraph, spec) -> col.ColoringResult:
     mask_np[prob.perm[:n_left]] = True        # left side, relabeled space
     out, final_C, retries = _run_d2_with_retry(
         prob, jnp.asarray(mask_np), spec.n_chunks, cap, spec.max_rounds, impl,
-        engine="rsoc_d2_partial", trace=tracer is not None)
+        engine="rsoc_d2_partial", trace=tracer is not None,
+        max_retries=spec.max_cap_retries)
     colors, r, trace, ftrace, tot = col._loop_outputs(out, tracer is not None)
     col._report_frontier(tracer, ftrace, r, cap=cap)
     conf, truncated = col._trim_trace(trace, r)

@@ -321,7 +321,8 @@ def _rsoc_compact_engine(g: CSRGraph, spec) -> col.ColoringResult:
                                   prob.pri, ctx, cap, spec.max_rounds)
 
     out, C_, retries = col._run_with_retry(run, prob.C,
-                                           engine="rsoc_compact")
+                                           engine="rsoc_compact",
+                                           max_retries=spec.max_cap_retries)
     colors, r, trace, ftrace, tot = col._loop_outputs(out, tracer is not None)
     col._report_frontier(tracer, ftrace, r, cap=cap)
     conf, truncated = col._trim_trace(trace, r)

@@ -45,6 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.csr import CSRGraph, FILL, ell_to_edges, from_edges
+from repro.resilience import faults
+from repro.resilience.errors import OvfGrowthExhausted
 
 
 # --------------------------------------------------------------------------
@@ -374,13 +376,19 @@ def plan_group(batches, delta_cap: int, n_pad: int):
 
 
 def apply_updates(ell, osrc, odst, ins: np.ndarray, dels: np.ndarray,
-                  delta_cap: int):
+                  delta_cap: int, max_grows=None):
     """Apply (k, 2) delete-then-insert batches (relabeled-space host arrays).
 
     Returns (ell, osrc, odst, touched, n_grows): ``touched`` is an (n_pad,)
     bool device mask of the endpoints of every update (the repair seed set),
-    ``n_grows`` counts overflow-buffer doublings performed.
+    ``n_grows`` counts overflow-buffer doublings performed.  ``max_grows``
+    bounds the doublings per batch (None: unbounded, the legacy behavior);
+    exhaustion raises ``OvfGrowthExhausted`` *before* mutating anything
+    further, which the degradation ladder (DESIGN.md §14) catches.
     """
+    if faults.fires("ovf.exhaust"):
+        raise OvfGrowthExhausted(grows=0, budget=max_grows,
+                                 cap=int(osrc.shape[0]), forced=True)
     plan = plan_updates(ins, dels, delta_cap, ell.shape[0])
     for wave in plan.ovf_del:
         osrc, odst = _delete_overflow(osrc, odst, jnp.asarray(wave))
@@ -403,6 +411,9 @@ def apply_updates(ell, osrc, odst, ins: np.ndarray, dels: np.ndarray,
             # grown buffer holds this wave's partial spills, so the snapshot
             # must be retaken — re-applying against the stale one would
             # duplicate the entries that did land
+            if max_grows is not None and grows >= max_grows:
+                raise OvfGrowthExhausted(grows=grows, budget=max_grows,
+                                         cap=int(osrc2.shape[0]))
             osrc, odst = grow_overflow(osrc2, odst2)
             ell = ell2
             grows += 1

@@ -30,6 +30,7 @@ from repro.core import frontier
 from repro.core.context import PassContext
 from repro.dynamic import delta
 from repro.graphs.csr import CSRGraph, FILL
+from repro.resilience.errors import CapRetryExhausted
 from repro import obs
 
 
@@ -61,6 +62,12 @@ class DynamicColoringState:
     total_gather_passes: int = 0
     retries: int = 0                # cumulative color-cap doublings
     ovf_grows: int = 0              # cumulative overflow-buffer growths
+    max_cap_retries: Optional[int] = None  # cap-doubling budget per repair
+                                    # (None: unbounded); exhaustion raises
+                                    # CapRetryExhausted -> ladder (§14)
+    max_ovf_growth: Optional[int] = None   # overflow-growth budget per batch
+    last_degrade_rung: int = 0      # ladder rung that produced this state:
+                                    # 0 incremental, 1 scratch, 2 oracle
 
     @property
     def colors(self) -> np.ndarray:
@@ -79,6 +86,7 @@ class DynamicColoringState:
                 "total_gather_passes": self.total_gather_passes,
                 "final_C": self.C, "retries": self.retries,
                 "ovf_grows": self.ovf_grows,
+                "degrade_rung": self.last_degrade_rung,
                 "ovf_load": delta.overflow_load(self.ovf_src)}
 
 
@@ -87,19 +95,23 @@ def dynamic_state(g: CSRGraph, seed: int = 0, n_chunks: int = 16,
                   ell_slack: int = 4, ovf_cap: Optional[int] = None,
                   delta_cap: int = 2048, frontier_frac: float = 0.125,
                   max_rounds: int = 1000,
-                  forbidden_impl: Optional[str] = None
+                  forbidden_impl: Optional[str] = None,
+                  max_cap_retries: Optional[int] = None,
+                  max_ovf_growth: Optional[int] = None
                   ) -> DynamicColoringState:
     """Encode ``g`` for mutation and color it from scratch once.
 
     ``ell_slack`` free slots are appended to every row so typical inserts
     land in ELL; ``ovf_cap`` sizes the spill buffer (grows on demand).
+    ``max_cap_retries`` / ``max_ovf_growth`` are persisted on the state and
+    bound every subsequent repair (None: unbounded, the legacy behavior).
     """
     impl = col._resolve_impl(forbidden_impl)
     with obs.phase("prepare"):
         prob = col.prepare(g, seed, n_chunks, ell_cap, C)
     (colors_n, r, trace, tot, _), final_C, retries = col._run_with_retry(
         col._prob_runner(col._rsoc_loop, prob, n_chunks, max_rounds, impl),
-        prob.C, engine="incremental")
+        prob.C, engine="incremental", max_retries=max_cap_retries)
 
     ell_np = np.asarray(prob.ell)
     if ell_slack > 0:
@@ -128,15 +140,39 @@ def dynamic_state(g: CSRGraph, seed: int = 0, n_chunks: int = 16,
         forbidden_impl=impl, max_rounds=int(max_rounds),
         version=0, last_rounds=int(r), last_conflicts=int(tot),
         last_gather_passes=1 + int(r), total_gather_passes=1 + int(r),
-        retries=retries, ovf_grows=0)
+        retries=retries, ovf_grows=0,
+        max_cap_retries=max_cap_retries, max_ovf_growth=max_ovf_growth)
 
 
-def _check_edges(edges, n: int, what: str) -> np.ndarray:
+def _check_edges(edges, n: int, what: str, *, tenant: Optional[str] = None,
+                 strict: bool = False) -> np.ndarray:
+    """Validate a (k, 2) edge batch; returns a defensive int64 copy.
+
+    ``strict`` (the service submit path) additionally rejects non-integer
+    dtypes, malformed shapes, and self-loops on inserts, naming the tenant
+    in every error so a bad batch is attributable before it is queued.
+    """
+    who = f"graph {tenant!r}: " if tenant is not None else ""
+    if strict:
+        raw = np.asarray(edges)
+        if raw.size and not np.issubdtype(raw.dtype, np.integer):
+            raise ValueError(
+                f"{who}{what} must be integer vertex ids "
+                f"(got dtype {raw.dtype})")
     # np.array (not asarray): always copy, so a caller reusing its batch
     # buffer cannot mutate edges after validation (service queues them)
-    e = np.array(edges, dtype=np.int64).reshape(-1, 2)
+    try:
+        e = np.array(edges, dtype=np.int64).reshape(-1, 2)
+    except (ValueError, TypeError) as exc:
+        raise ValueError(
+            f"{who}{what} must be a (k, 2) edge array: {exc}") from exc
     if len(e) and (e.min() < 0 or e.max() >= n):
-        raise ValueError(f"{what} contains vertex ids outside [0, {n})")
+        raise ValueError(f"{who}{what} contains vertex ids outside [0, {n})")
+    if strict and what == "inserts" and len(e) and bool((e[:, 0] == e[:, 1]).any()):
+        bad = e[e[:, 0] == e[:, 1]][0]
+        raise ValueError(
+            f"{who}{what} contains self-loop ({int(bad[0])}, {int(bad[1])}); "
+            f"self-loops are not colorable edges — filter them out")
     return e
 
 
@@ -168,7 +204,7 @@ def recolor_incremental(state: DynamicColoringState,
 
     ell, osrc, odst, U, grows = delta.apply_updates(
         state.ell, state.ovf_src, state.ovf_dst, ins_r, dels_r,
-        state.delta_cap)
+        state.delta_cap, max_grows=state.max_ovf_growth)
 
     # repair: frontier-compacted fused RSOC seeded from touched endpoints
     def run(C):
@@ -180,14 +216,15 @@ def recolor_incremental(state: DynamicColoringState,
             state.frontier_cap, max_rounds)
 
     (colors2, r, trace, tot, _), C, retries = col._run_with_retry(
-        run, state.C, engine="incremental")
+        run, state.C, engine="incremental", max_retries=state.max_cap_retries)
     passes = int(r)
     return dataclasses.replace(
         state, ell=ell, ovf_src=osrc, ovf_dst=odst, colors_dev=colors2,
         C=C, version=state.version + 1, last_rounds=int(r),
         last_conflicts=int(tot), last_gather_passes=passes,
         total_gather_passes=state.total_gather_passes + passes,
-        retries=state.retries + retries, ovf_grows=state.ovf_grows + grows)
+        retries=state.retries + retries, ovf_grows=state.ovf_grows + grows,
+        last_degrade_rung=0)
 
 
 # --------------------------------------------------------------------------
@@ -200,12 +237,31 @@ def _incremental_engine(g: CSRGraph, spec) -> col.ColoringResult:
     """Encode ``g`` for mutation and color it from scratch once; the
     device-resident ``DynamicColoringState`` rides the result's ``state``
     field so callers (``ColoringService.add_graph``) can keep applying
-    ``recolor_incremental`` update batches to it."""
-    st = dynamic_state(
-        g, seed=spec.seed, n_chunks=spec.n_chunks, ell_cap=spec.ell_cap,
-        C=spec.C, ell_slack=spec.ell_slack, ovf_cap=spec.ovf_cap,
-        delta_cap=spec.delta_cap, frontier_frac=spec.frontier_frac,
-        max_rounds=spec.max_rounds, forbidden_impl=spec.forbidden_impl)
+    ``recolor_incremental`` update batches to it.
+
+    With a finite ``spec.max_cap_retries`` budget the from-scratch solve can
+    exhaust its cap doublings; this engine then drops straight to the serial
+    oracle encoding (ladder rung 2) rather than failing the add — the
+    result's ``degrade_rung`` records the downgrade."""
+    try:
+        st = dynamic_state(
+            g, seed=spec.seed, n_chunks=spec.n_chunks, ell_cap=spec.ell_cap,
+            C=spec.C, ell_slack=spec.ell_slack, ovf_cap=spec.ovf_cap,
+            delta_cap=spec.delta_cap, frontier_frac=spec.frontier_frac,
+            max_rounds=spec.max_rounds, forbidden_impl=spec.forbidden_impl,
+            max_cap_retries=spec.max_cap_retries,
+            max_ovf_growth=spec.max_ovf_growth)
+    except CapRetryExhausted:
+        from repro.obs import metrics as _metrics
+        from repro.resilience import ladder
+        _metrics.counter("resilience.degrade", rung="oracle").inc()
+        st = ladder.encode_oracle_state(
+            g, seed=spec.seed, n_chunks=spec.n_chunks, ell_cap=spec.ell_cap,
+            ell_slack=spec.ell_slack, ovf_cap=spec.ovf_cap,
+            delta_cap=spec.delta_cap, frontier_frac=spec.frontier_frac,
+            max_rounds=spec.max_rounds, forbidden_impl=spec.forbidden_impl,
+            max_cap_retries=spec.max_cap_retries,
+            max_ovf_growth=spec.max_ovf_growth)
     colors = st.colors
     return col.ColoringResult(
         colors=colors, n_rounds=st.last_rounds,
@@ -213,4 +269,5 @@ def _incremental_engine(g: CSRGraph, spec) -> col.ColoringResult:
         total_conflicts=st.last_conflicts,
         n_colors=col.n_colors_used(colors),
         overflow=st.retries > 0, gather_passes=st.last_gather_passes,
-        final_C=st.C, retries=st.retries, distance=1, state=st)
+        final_C=st.C, retries=st.retries, distance=1, state=st,
+        degrade_rung=st.last_degrade_rung)

@@ -51,6 +51,7 @@ from repro.core.context import PassContext
 from repro.dynamic import delta
 from repro.dynamic import incremental as inc
 from repro.dynamic.incremental import DynamicColoringState
+from repro.resilience import ladder
 
 
 def slot_key(state: DynamicColoringState) -> tuple:
@@ -261,7 +262,8 @@ def step_group(states: Sequence[DynamicColoringState],
                     if rnd < len(rel_q[i]) \
                             and rel_q[i][rnd] is not None:
                         ins, dels = raw_q[i][rnd]
-                        cur[i] = inc.recolor_incremental(cur[i], ins, dels)
+                        cur[i], _ = ladder.apply_with_ladder(cur[i], ins,
+                                                             dels)
                         outcomes[i]["solo"] += 1
         act = [set(i for i in range(k)
                    if not solo[i] and rnd < len(rel_q[i])
@@ -311,7 +313,7 @@ def step_group(states: Sequence[DynamicColoringState],
                     ovf_dst=prev[2][i], colors_dev=prev[3][i])
             for ri in mine:
                 ins, dels = raw_q[i][chunk[ri]]
-                st = inc.recolor_incremental(st, ins, dels)
+                st, _ = ladder.apply_with_ladder(st, ins, dels)
                 outcomes[i]["escaped"] += 1
             cur[i] = st
             if slot_key(st) == key:

@@ -40,6 +40,7 @@ from repro.kernels.twohop import twohop_detect_recolor as _twohop_pallas
 from repro.kernels.ell_spmm import ell_spmm as _spmm_pallas
 from repro.kernels.flash_attention import flash_attention as _fa_pallas
 from repro.obs import metrics as obs_metrics
+from repro.resilience import faults
 
 # Per-invocation VMEM residency budget (conservative: real cores have
 # ~16 MB; half is left to XLA temporaries and the pipeline itself).
@@ -52,6 +53,18 @@ def default_backend() -> str:
 
 def _resolve(backend: str) -> str:
     return default_backend() if backend == "auto" else backend
+
+
+def _forced_fallback(kernel: str, b: str) -> str:
+    """``kernel.fallback`` fault site (DESIGN.md §14.4): force the jnp
+    reference path — bit-identical output by the parity contract, so chaos
+    runs exercise the fallback plumbing without changing results.  With
+    faults off this is one module-global None check."""
+    if b != "jnp" and faults.fires("kernel.fallback", kernel=kernel):
+        obs_metrics.counter("kernels.fallback", kernel=kernel,
+                            reason="forced").inc()
+        return "jnp"
+    return b
 
 
 def _dispatched(kernel: str, backend: str) -> None:
@@ -192,6 +205,7 @@ def firstfit(ell, colors, C: int = 64, backend: str = "auto",
                 f"{_mb(need)} > {_mb(VMEM_BUDGET_BYTES)} budget "
                 f"(the (n,) color vector is not pageable)")
             b = "jnp"
+    b = _forced_fallback("firstfit", b)
     _dispatched("firstfit", b)
     if b == "jnp":
         return ref.firstfit_ref(ell, colors, C, impl=impl)
@@ -215,6 +229,7 @@ def detect_recolor(ell, colors, pri, U_rows, row_start: int, C: int = 64,
                 f"{_mb(need)} > {_mb(VMEM_BUDGET_BYTES)} budget "
                 f"(the (n,) color/priority vectors are not pageable)")
             b = "jnp"
+    b = _forced_fallback("detect_recolor", b)
     _dispatched("detect_recolor", b)
     if b == "jnp":
         return ref.detect_recolor_ref(ell, colors, pri, row_start, U_rows, C,
@@ -250,6 +265,7 @@ def twohop(ell_rows, ell_all, colors, pri, U_rows, row_start: int,
                 f"{_mb(VMEM_BUDGET_BYTES)} budget — the (n,) color/priority "
                 f"vectors are not pageable (degenerate shape)")
             b = "jnp"
+    b = _forced_fallback("twohop", b)
     _dispatched("twohop", b)
     if b == "jnp":
         return ref.twohop_ref(ell_rows, ell_all, colors, pri, row_start,
@@ -278,6 +294,7 @@ def ell_aggregate(ell, feats, op: str = "sum", backend: str = "auto", **kw):
                 f"{min(kw.get('block_feats', 128), d)} ({feats.dtype}) is "
                 f"{_mb(need)} > {_mb(VMEM_BUDGET_BYTES)} budget")
             b = "jnp"
+    b = _forced_fallback("ell_aggregate", b)
     _dispatched("ell_aggregate", b)
     if b == "jnp":
         return ref.ell_spmm_ref(ell, feats, op)

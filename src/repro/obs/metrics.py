@@ -91,6 +91,16 @@ class Histogram:
     def count(self) -> int:
         return self._count
 
+    def clear(self) -> None:
+        """Forget every observation (count, total, max, reservoir) while
+        keeping the instance registered — ``ColoringService.restore`` uses
+        this so post-rollback latencies start a fresh distribution."""
+        with _LOCK:
+            self._values.clear()
+            self._count = 0
+            self._total = 0.0
+            self._max = float("-inf")
+
     def percentile(self, q: float) -> Optional[float]:
         """Exact q-th percentile (0..100) over the retained reservoir."""
         with _LOCK:

@@ -1,0 +1,211 @@
+"""Env-driven chaos sweep (``make chaos``, DESIGN.md §14.5).
+
+Skipped entirely unless ``REPRO_FAULTS`` is set — the driver arms one fault
+class per invocation (under both kernel backends) and this module pushes a
+fixed multi-tenant workload through a ``ColoringService``, asserting the
+recovery matrix's promises:
+
+  * after every step, every committed (non-quarantined) state is proper and
+    its version is monotone — no half-applied batch is ever observable;
+  * the faulted run is **deterministic**: an identically-seeded second run
+    (same spec, ``faults.reset()`` between) commits bit-identical states
+    and quarantines the same tenants for the same reasons;
+  * every quarantined tenant carries a structured reason, still serves its
+    last-good proper coloring, and — once the fault is suppressed — heals
+    back to a proper state with its dead letters replayed;
+  * for *non-degrading* fault classes (everything except ``cap.exhaust`` /
+    ``ovf.exhaust``), the healed+drained service is **bit-identical** to a
+    fault-free reference run over the accepted batches; degrading classes
+    commit proper-but-different colorings (the ladder's contract), which
+    the determinism assertion pins instead.
+
+Dead letters observed before healing are exported as JSONL when
+``REPRO_DEADLETTER_DIR`` is set (uploaded as CI chaos artifacts).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import coloring as col
+from repro.dynamic.service import ColoringService
+from repro.graphs import csr
+from repro.resilience import faults
+from repro.resilience.errors import InjectedFault, QuarantinedError
+
+pytestmark = pytest.mark.skipif(
+    not os.environ.get("REPRO_FAULTS"),
+    reason="chaos tests only run with REPRO_FAULTS set (make chaos)")
+
+OPTS = dict(seed=0, n_chunks=2, ell_cap=6, C=16, ovf_cap=64, delta_cap=32,
+            frontier_frac=0.5, max_cap_retries=2, max_ovf_growth=2)
+N = 48
+TENANTS = ("t0", "t1", "t2")
+STEPS = 6
+DEGRADING_SITES = {"cap.exhaust", "ovf.exhaust"}
+
+
+def _sites() -> set:
+    return set(faults.parse_spec(os.environ["REPRO_FAULTS"]))
+
+
+def _graph(s: int):
+    r = np.random.default_rng(s)
+    e = r.integers(0, N, (120, 2))
+    e = e[e[:, 0] != e[:, 1]]
+    return csr.from_edges(N, e)
+
+
+def _stream(seed: int = 3) -> list:
+    r = np.random.default_rng(seed)
+    out = []
+    for _ in range(STEPS):
+        per = {}
+        for nm in TENANTS:
+            ins = r.integers(0, N, (6, 2))
+            ins = ins[ins[:, 0] != ins[:, 1]]
+            dels = r.integers(0, N, (2, 2))
+            per[nm] = (ins, dels)
+        out.append(per)
+    return out
+
+
+def _run(megabatch: bool):
+    """Push the fixed stream through one faulted service.
+
+    Returns (svc, accepted, record): ``accepted`` is the per-tenant list of
+    batches the submit path took (injected submit faults retry 3x, then the
+    batch is abandoned — the reference run sees the same list), ``record``
+    is the per-step outcome trace the determinism assertion compares.
+    """
+    svc = ColoringService(megabatch=megabatch, quarantine_after=2, **OPTS)
+    for i, nm in enumerate(TENANTS):
+        svc.add_graph(nm, _graph(i))
+    accepted = {nm: [] for nm in TENANTS}
+    record = []
+    last_v = {nm: 0 for nm in TENANTS}
+    for per in _stream():
+        for nm, (ins, dels) in per.items():
+            for _attempt in range(3):
+                try:
+                    svc.submit(nm, inserts=ins, deletes=dels)
+                except InjectedFault:
+                    continue              # submit-path fault: bounded retry
+                except QuarantinedError:
+                    break
+                else:
+                    accepted[nm].append((ins, dels))
+                    break
+        stats = svc.step()
+        row = {}
+        for nm in TENANTS:
+            s = stats[nm]
+            if svc.quarantined(nm) is None:
+                # invariant: a committed state is always proper — never a
+                # half-applied or corrupted batch
+                assert col.is_proper(svc.graph(nm), svc.colors(nm)), nm
+            assert s["version"] >= last_v[nm], nm
+            last_v[nm] = s["version"]
+            row[nm] = (int(s["version"]), s.get("rolled_back"),
+                       s.get("quarantined"), int(s["degrade_rung"]))
+        record.append(row)
+    return svc, accepted, record
+
+
+def _reference(accepted: dict):
+    """Fault-free run over exactly the accepted batches (loop path; the
+    mega path is bit-identical to it by the §13 differential tests)."""
+    with faults.suppress():
+        ref = ColoringService(megabatch=False, **OPTS)
+        for i, nm in enumerate(TENANTS):
+            ref.add_graph(nm, _graph(i))
+        for nm in TENANTS:
+            for ins, dels in accepted[nm]:
+                ref.submit(nm, inserts=ins, deletes=dels)
+            ref.step(nm)
+    return ref
+
+
+def _export(svc, tag: str) -> None:
+    d = os.environ.get("REPRO_DEADLETTER_DIR")
+    if not d or not svc.dead_letters():
+        return
+    os.makedirs(d, exist_ok=True)
+    site = "_".join(sorted(_sites())).replace(".", "-")
+    svc.export_dead_letters(os.path.join(d, f"{site}_{tag}.jsonl"))
+
+
+@pytest.mark.parametrize("megabatch", [False, True],
+                         ids=["loop", "mega"])
+def test_chaos_recovery(megabatch):
+    faults.reset()
+    svc, accepted, _record = _run(megabatch)
+    _export(svc, "mega" if megabatch else "loop")
+
+    # quarantined tenants: structured reason + last-good still proper
+    for nm, q in svc.quarantined().items():
+        assert q.reason in ("injected", "cap_exhausted", "ovf_exhausted",
+                            "improper", "error"), q.reason
+        assert col.is_proper(svc.graph(nm), svc.colors(nm)), nm
+        assert svc.dead_letters(nm), nm      # the drain was preserved
+
+    # fault gone: heal every frozen tenant, drain every requeued batch
+    with faults.suppress():
+        for nm in list(svc.quarantined()):
+            svc.heal(nm)
+            assert svc.quarantined(nm) is None
+        guard = 0
+        while any(svc.pending(nm) for nm in TENANTS):
+            svc.step()
+            guard += 1
+            assert guard < 32, "pending queue failed to drain"
+
+    ref = _reference(accepted)
+    degrading = bool(_sites() & DEGRADING_SITES)
+    for nm in TENANTS:
+        assert col.is_proper(svc.graph(nm), svc.colors(nm)), nm
+        if not degrading:
+            # recovery contract: bit-identical to the run that never failed
+            assert np.array_equal(svc.colors(nm), ref.colors(nm)), nm
+            assert svc.version(nm) == ref.version(nm), nm
+
+
+@pytest.mark.parametrize("megabatch", [False, True],
+                         ids=["loop", "mega"])
+def test_chaos_deterministic_replay(megabatch):
+    faults.reset()
+    svc1, _a1, rec1 = _run(megabatch)
+    faults.reset()
+    svc2, _a2, rec2 = _run(megabatch)
+    assert rec1 == rec2
+    assert sorted(svc1.quarantined()) == sorted(svc2.quarantined())
+    for nm, q in svc1.quarantined().items():
+        assert svc2.quarantined(nm).reason == q.reason
+    for nm in TENANTS:
+        assert np.array_equal(svc1.colors(nm), svc2.colors(nm)), nm
+        assert svc1.version(nm) == svc2.version(nm), nm
+
+
+def test_kernel_fallback_forced_parity():
+    """``kernel.fallback`` never changes results: a forced jnp fallback is
+    bit-identical to the requested backend (the parity contract)."""
+    if "kernel.fallback" not in _sites():
+        pytest.skip("kernel.fallback not armed")
+    import jax.numpy as jnp
+
+    from repro.graphs.csr import FILL
+    from repro.kernels import ops
+
+    backend = os.environ.get("REPRO_KERNEL_BACKEND", "pallas_interpret")
+    r = np.random.default_rng(0)
+    R = 256                       # one full block: R % block_rows == 0
+    ell_np = r.integers(0, R, (R, 8)).astype(np.int32)
+    ell_np[r.random((R, 8)) < 0.4] = FILL
+    ell = jnp.asarray(ell_np)
+    colors = jnp.asarray(r.integers(-1, 16, (R,)).astype(np.int32))
+    faults.reset()
+    forced = ops.firstfit(ell, colors, C=32, backend=backend)
+    with faults.suppress():
+        want = ops.firstfit(ell, colors, C=32, backend=backend)
+    for a, b in zip(forced, want):
+        assert np.array_equal(np.asarray(a), np.asarray(b))

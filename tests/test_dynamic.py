@@ -212,7 +212,9 @@ def test_service_multi_graph_smoke():
     sched0 = svc.vertex_schedule("mesh")
     assert svc.vertex_schedule("mesh") is sched0
     v0 = svc.version("mesh")
-    assert svc.submit("mesh", inserts=rng.integers(0, 256, (30, 2))) == 1
+    mesh_ins = rng.integers(0, 256, (30, 2))
+    mesh_ins = mesh_ins[mesh_ins[:, 0] != mesh_ins[:, 1]]
+    assert svc.submit("mesh", inserts=mesh_ins) == 1
     assert svc.submit("rmat", deletes=to_edge_list(gen.rmat_g(10))[:40]) == 1
     stats = svc.step()
     assert svc.version("mesh") == v0 + 1 and svc.pending("mesh") == 0
