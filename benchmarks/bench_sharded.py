@@ -1,0 +1,131 @@
+"""Sharded incremental recoloring: step latency and halo traffic vs scale.
+
+The claim under test (DESIGN.md §15): a sharded tenant's repair pays one
+collective per round whose payload is O(boundary), not O(n).  On a 2-D mesh
+family the boundary of a block partition grows like √n per cut, so the
+8-shard halo bytes/round must grow with n but *sublinearly* — that curve is
+recorded in BENCH_sharded.json and asserted here.  The 1-shard column is
+the differential bar: identical colors to the single-device
+``mode="incremental"`` engine on the same update stream.
+
+Shard counts need forced host devices, so the sweep runs in ONE dedicated
+subprocess (same trick as tests/test_sharded.py) that sets XLA_FLAGS before
+importing jax and reports every row as JSON on its last stdout line.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import Csv
+
+SCALES = {"tiny": (16, 24), "small": (32, 48), "medium": (48, 96)}
+SHARDS = (1, 4, 8)
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import sys
+import time
+import numpy as np
+import jax
+from repro import api
+from repro.core import coloring as col
+from repro.dynamic import delta, recolor_sharded
+from repro.dynamic.incremental import recolor_incremental
+from repro.graphs import generators as gen
+
+sides = json.loads(sys.argv[1])
+shard_counts = json.loads(sys.argv[2])
+rows = []
+for s in sides:
+    g = gen.mesh2d(s, s)
+    n = g.n_vertices
+
+    def batches(k=5, bs=64):
+        rng = np.random.default_rng(17)
+        for _ in range(k + 1):
+            ins = rng.integers(0, n, size=(bs, 2)).astype(np.int64)
+            dels = rng.integers(0, n, size=(bs // 4, 2)).astype(np.int64)
+            yield ins[ins[:, 0] != ins[:, 1]], dels
+
+    # reference stream for the 1-shard differential
+    ref = api.color(g, mode="incremental", seed=0).state
+    ref_colors = []
+    for ins, dels in batches():
+        ref = recolor_incremental(ref, ins, dels)
+        ref_colors.append(ref.colors)
+
+    for D in shard_counts:
+        mesh = jax.make_mesh((D,), ("data",))
+        st = api.color(g, mode="incremental", backend="distributed",
+                       mesh=mesh, seed=0).state
+        times, identical = [], True
+        for i, (ins, dels) in enumerate(batches()):
+            t0 = time.perf_counter()
+            st = recolor_sharded(st, ins, dels)
+            st.colors_dev.block_until_ready()
+            dt = time.perf_counter() - t0
+            if i > 0:            # first batch is the jit warmup
+                times.append(dt)
+            if D == 1:
+                identical = identical and bool(
+                    np.array_equal(st.colors, ref_colors[i]))
+        rows.append({
+            "graph": f"mesh2d_{s}x{s}", "n": n, "shards": D,
+            "p50_step_ms": float(np.median(times)) * 1e3,
+            "halo_bytes_per_round": int(st.halo_bytes_per_round),
+            "last_halo_bytes": int(st.last_halo_bytes),
+            "colors": int(st.n_colors),
+            "proper": bool(col.is_proper(delta.state_to_csr(st),
+                                         st.colors)),
+            "identical_1shard": bool(identical) if D == 1 else None,
+            "replans": int(st.replans),
+        })
+print(json.dumps(rows))
+"""
+
+
+def main(scale: str = "small") -> None:
+    if scale not in SCALES:
+        raise SystemExit(f"unknown scale {scale!r}; known: {sorted(SCALES)}")
+    sides = SCALES[scale]
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.setdefault("PYTHONPATH", "src")
+    p = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, json.dumps(list(sides)),
+         json.dumps(list(SHARDS))],
+        capture_output=True, text=True, env=env, timeout=3000)
+    if p.returncode != 0:
+        raise SystemExit(f"sharded bench subprocess failed:\n"
+                         f"{p.stderr[-3000:]}")
+    rows = json.loads(p.stdout.strip().splitlines()[-1])
+    csv = Csv(["graph", "n", "shards", "p50_step_ms", "halo_bytes_per_round",
+               "last_halo_bytes", "colors", "proper", "identical_1shard",
+               "replans"])
+    for r in rows:
+        csv.row(*[r[h] for h in csv.header])
+
+    # acceptance: every run proper; 1-shard bit-identical; 8-shard halo
+    # bytes/round grows with n but sublinearly (boundary ~ sqrt(n))
+    assert all(r["proper"] for r in rows), "improper sharded coloring"
+    assert all(r["identical_1shard"] for r in rows if r["shards"] == 1), \
+        "1-shard sharded stream diverged from mode='incremental'"
+    by_n = sorted((r["n"], r["halo_bytes_per_round"])
+                  for r in rows if r["shards"] == 8)
+    (n0, h0), (n1, h1) = by_n[0], by_n[-1]
+    ok = h0 < h1 and (h1 / h0) < (n1 / n0)
+    print(f"# acceptance: 8-shard halo bytes/round {h0} -> {h1} over "
+          f"n {n0} -> {n1}: growing={h0 < h1} "
+          f"sublinear={(h1 / h0):.2f}x < {(n1 / n0):.2f}x -> "
+          f"{'PASS' if ok else 'FAIL'}", flush=True)
+    if not ok:
+        raise SystemExit("sharded halo-traffic acceptance failed")
+
+
+if __name__ == "__main__":
+    main()

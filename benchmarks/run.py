@@ -8,6 +8,7 @@
   colored_scatter  the technique applied to GNN aggregation
   incremental      dynamic-graph incremental recoloring vs from-scratch
   service          multi-tenant ColoringService: megabatched vs loop step
+  sharded          sharded incremental: step latency + halo bytes vs scale
   lm_step          measured smoke-scale LM train-step wall time
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--scale=NAME] [--json]
@@ -34,7 +35,8 @@ import time
 
 
 SECTIONS = ["table1", "conflicts", "colors", "forbidden", "distance2",
-            "colored_scatter", "incremental", "service", "lm_step"]
+            "colored_scatter", "incremental", "service", "sharded",
+            "lm_step"]
 SCALES = ["tiny", "small", "medium"]
 # (SECTION_KEYS below must stay exhaustive over SECTIONS — checked at
 # import so a new section cannot silently ship schema-less)
@@ -66,6 +68,9 @@ SECTION_KEYS = {
     "incremental": ("graph", "ws_mb", "spec_key", "spec", "n_rounds",
                     "retries", "kernel_fallbacks"),
     "service": ("ms", "kernel_fallbacks"),
+    # sharded runs its mesh sweep in a subprocess, so no spec echo and no
+    # kernel-fallback attribution land in the parent's rows
+    "sharded": ("graph", "colors", "kernel_fallbacks"),
     "lm_step": ("params_mb", "kernel_fallbacks"),
 }
 assert set(SECTION_KEYS) == set(SECTIONS), \
@@ -135,6 +140,8 @@ def _section(name: str):
         from benchmarks import bench_incremental as b
     elif name == "service":
         from benchmarks import bench_service as b
+    elif name == "sharded":
+        from benchmarks import bench_sharded as b
     elif name == "lm_step":
         return lm_step
     else:

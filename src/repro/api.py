@@ -43,6 +43,7 @@ from repro.core import frontier as _frontier        # noqa: F401
 from repro.core import distance2 as _distance2      # noqa: F401
 from repro.core import distributed as _distributed  # noqa: F401
 from repro.dynamic import incremental as _incremental  # noqa: F401
+from repro.dynamic import sharded as _sharded          # noqa: F401
 
 MODES = ("static", "incremental", "partial")
 BACKENDS = ("local", "distributed")

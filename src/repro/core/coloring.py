@@ -320,17 +320,22 @@ def _forbidden_from_nbrc(nbrc, C):
 
 
 def _chunked_pass(ctx, ell, osrc, odst, pri, colors, U, force, *,
-                  detect: bool):
+                  detect: bool, valid=None):
     """One sequential sweep over n_chunks chunks.
 
     detect=False (CAT phase A): re-color every vertex in U | force.
     detect=True  (RSOC fused) : re-color a vertex in U only if it is
                                 defective right now (fresh check), or forced.
+    ``valid`` overrides the default prefix validity mask (length
+    ``ctx.n_pad``) — the sharded engine's per-shard row layout is not a
+    prefix of the global vertex range.  ``colors``/``pri`` may be longer
+    than ``ctx.n_pad`` (a sharded color table with a ghost tail): only the
+    first ``n_pad`` rows are swept, but gathers read the full table.
     Returns (colors, recolored_mask, n_defects, overflowed).
     """
     n, n_pad, C, n_chunks, impl = ctx.unpack()
     cs = n_pad // n_chunks
-    valid_row = jnp.arange(n_pad) < n
+    valid_row = jnp.arange(n_pad) < n if valid is None else valid
     has_ovf = osrc.shape[0] > 0
     snap_forb = (_snapshot_coo(osrc, odst, colors, n_pad, C, impl)
                  if has_ovf else None)

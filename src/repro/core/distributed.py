@@ -303,6 +303,185 @@ def build_rsoc_halo(mesh: Mesh, axis: str, plan_shapes: dict,
 
 
 # --------------------------------------------------------------------------
+# sharded mutable-state passes (dynamic/sharded.py; DESIGN.md §15)
+#
+# Same halo protocol as build_rsoc_halo — ONE all_gather per round carrying
+# [boundary colors, n_defects, work, overflow] — but over the *mutable*
+# encode: per-shard overflow COO alongside the ELL, external (colors, U)
+# seeds instead of a from-scratch start, and the overflow flag threaded out
+# last so ``col._run_with_retry`` can drive cap doubling.  Builders are
+# lru_cached: rebuilding a shard_map per call would mint a fresh function
+# identity and recompile on every service step.
+# --------------------------------------------------------------------------
+
+def _sharded_exchange(axname, D, n_loc, max_b, boundary, ghost_flat):
+    """Shared halo exchange: publish my boundary colors + (n_def, work, ovf)
+    scalars, gather all shards' payloads, refresh my ghost tail.  Returns a
+    closure ``exchange(tab, n_def_l, work_l, ovf_l) -> (tab, n_def, work,
+    ovf)`` with the scalars globally summed/or-ed."""
+
+    def exchange(tab, n_def_l, work_l, ovf_l):
+        b = jnp.where(boundary >= 0,
+                      tab[jnp.clip(boundary, 0, n_loc - 1)], -1)
+        tail = jnp.stack([n_def_l.astype(jnp.int32),
+                          work_l.astype(jnp.int32),
+                          ovf_l.astype(jnp.int32)])
+        allp = jax.lax.all_gather(jnp.concatenate([b, tail]), axname,
+                                  tiled=False).reshape(D, max_b + 3)
+        flat = allp[:, :max_b].reshape(D * max_b)
+        ghosts = jnp.where(ghost_flat >= 0,
+                           flat[jnp.clip(ghost_flat, 0, D * max_b - 1)], -1)
+        tab = jax.lax.dynamic_update_slice_in_dim(tab, ghosts, n_loc, 0)
+        return (tab, allp[:, max_b].sum(), allp[:, max_b + 1].sum(),
+                allp[:, max_b + 2].sum() > 0)
+
+    return exchange
+
+
+@functools.lru_cache(maxsize=None)
+def build_sharded_scratch(mesh: Mesh, axis: str, D: int, n_loc: int,
+                          max_b: int, max_g: int, ctx: PassContext,
+                          max_rounds: int):
+    """From-scratch coloring of a sharded mutable state: round 0 force-colors
+    every valid local row, then fused detect-and-recolor rounds with one halo
+    exchange each.  On a 1-shard mesh this replays ``col._rsoc_loop``'s
+    program bit-for-bit (same chunked pass, same carry schedule).
+
+    Returns jit fn(ell (D*n_loc, W), ovf_src (D*cap,), ovf_dst (D*cap,),
+    pri_tab (D*n_tab,), valid_loc (D*n_loc,), boundary (D*max_b,),
+    ghost_flat (D*max_g,)) -> (colors_tab (D*n_tab,), rounds, trace,
+    total_conflicts, overflowed)."""
+    axes = tuple(axis.split(","))
+    axname = axes if len(axes) > 1 else axes[0]
+    n_tab = n_loc + max_g
+    lctx = dataclasses.replace(ctx, n=n_loc, n_pad=n_loc, trace=False)
+
+    def body(ell, osrc, odst, pri_tab, valid_loc, boundary, ghost_flat):
+        exchange = _sharded_exchange(axname, D, n_loc, max_b, boundary,
+                                     ghost_flat)
+        tab0 = jnp.full((n_tab,), -1, jnp.int32)
+        zeros = jnp.zeros((n_loc,), bool)
+
+        # round 0: color every valid local row against fresh local colors
+        tab, U, _, ovf0 = col._chunked_pass(
+            lctx, ell, osrc, odst, pri_tab, tab0, zeros, valid_loc,
+            detect=False, valid=valid_loc)
+        tab, _, _, ovf_g = exchange(tab, jnp.int32(0), jnp.int32(0), ovf0)
+
+        def cond(s):
+            return (s[4] > 0) & (s[3] < max_rounds)
+
+        def body_fn(s):
+            tab, U, trace, r, _, tot, ovf = s
+            colors_loc = jax.lax.dynamic_slice_in_dim(tab, 0, n_loc, 0)
+            force = U & (colors_loc < 0)
+            tab2, recolored, n_def_l, ovf_l = col._chunked_pass(
+                lctx, ell, osrc, odst, pri_tab, tab, U, force,
+                detect=True, valid=valid_loc)
+            tab2, n_def, work, ovf2 = exchange(
+                tab2, n_def_l, n_def_l + force.sum(dtype=jnp.int32),
+                ovf | ovf_l)
+            trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(
+                n_def.astype(jnp.int32))
+            return (tab2, recolored, trace, r + 1, work.astype(jnp.int32),
+                    tot + n_def.astype(jnp.int32), ovf2)
+
+        trace = jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32)
+        s = (tab, U, trace, jnp.int32(0), jnp.int32(1), jnp.int32(0), ovf_g)
+        tab, _, trace, r, _, tot, ovf = jax.lax.while_loop(cond, body_fn, s)
+        return tab, r, trace, tot, ovf
+
+    row = P(*((axes if len(axes) > 1 else (axes[0],)) + (None,)))
+    vec = P(axes if len(axes) > 1 else axes[0])
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(row, vec, vec, vec, vec, vec, vec),
+                  out_specs=(vec, P(), P(), P(), P()), check_rep=False)
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=None)
+def build_sharded_repair(mesh: Mesh, axis: str, D: int, n_loc: int,
+                         max_b: int, max_g: int, ctx: PassContext,
+                         cap: int, max_rounds: int):
+    """Incremental repair of a sharded mutable state from external
+    (colors, U) seeds: the sharded counterpart of
+    ``frontier._repair_compact_loop``, with a halo exchange per round.
+
+    An up-front exchange freshens ghost colors before the first detect
+    (newly-allocated ghost slots start at -1 on the referencing shard), then
+    each round recolors the frontier — compacted to ``cap`` slots when small
+    enough, full chunked sweep otherwise — and exchanges boundary colors +
+    termination scalars in one collective.  On a 1-shard mesh this replays
+    ``frontier._repair_compact_loop`` bit-for-bit.
+
+    Returns jit fn(ell, ovf_src, ovf_dst, pri_tab, colors_tab, U, valid_loc,
+    boundary, ghost_flat) -> (colors_tab, rounds, trace, total_conflicts,
+    overflowed)."""
+    from repro.core import frontier
+
+    axes = tuple(axis.split(","))
+    axname = axes if len(axes) > 1 else axes[0]
+    n_tab = n_loc + max_g
+    lctx = dataclasses.replace(ctx, n=n_loc, n_pad=n_loc, trace=False)
+
+    def body(ell, osrc, odst, pri_tab, colors_tab, U, valid_loc, boundary,
+             ghost_flat):
+        exchange = _sharded_exchange(axname, D, n_loc, max_b, boundary,
+                                     ghost_flat)
+        tab0, _, _, _ = exchange(colors_tab, jnp.int32(0), jnp.int32(0),
+                                 jnp.bool_(False))
+
+        def cond(s):
+            return (s[4] > 0) & (s[3] < max_rounds)
+
+        def body_fn(s):
+            tab, U, trace, r, _, tot, ovf = s
+            count = U.sum(dtype=jnp.int32)
+            colors_loc = jax.lax.dynamic_slice_in_dim(tab, 0, n_loc, 0)
+            n_forced = (U & (colors_loc < 0)).sum(dtype=jnp.int32)
+
+            def small(args):
+                tab, U = args
+                # fill_value = n_tab (NOT n_loc): dead frontier slots must
+                # fall off the table, not alias ghost slot 0
+                idx = jnp.nonzero(U, size=cap, fill_value=n_tab)[0].astype(
+                    jnp.int32)
+                tab2, rec, n_def, o = frontier._compact_pass(
+                    lctx, ell, osrc, odst, pri_tab, tab, idx, idx < n_tab)
+                return tab2, rec[:n_loc], n_def, o
+
+            def big(args):
+                tab, U = args
+                force = U & (jax.lax.dynamic_slice_in_dim(
+                    tab, 0, n_loc, 0) < 0)
+                return col._chunked_pass(
+                    lctx, ell, osrc, odst, pri_tab, tab, U, force,
+                    detect=True, valid=valid_loc)
+
+            tab2, recolored, n_def_l, ovf_l = jax.lax.cond(
+                count <= cap, small, big, (tab, U))
+            tab2, n_def, work, ovf2 = exchange(
+                tab2, n_def_l, n_def_l + n_forced, ovf | ovf_l)
+            trace = trace.at[jnp.minimum(r, MAX_ROUNDS_TRACE - 1)].set(
+                n_def.astype(jnp.int32))
+            return (tab2, recolored, trace, r + 1, work.astype(jnp.int32),
+                    tot + n_def.astype(jnp.int32), ovf2)
+
+        trace = jnp.zeros((MAX_ROUNDS_TRACE,), jnp.int32)
+        s = (tab0, U, trace, jnp.int32(0), jnp.int32(1), jnp.int32(0),
+             jnp.bool_(False))
+        tab, _, trace, r, _, tot, ovf = jax.lax.while_loop(cond, body_fn, s)
+        return tab, r, trace, tot, ovf
+
+    row = P(*((axes if len(axes) > 1 else (axes[0],)) + (None,)))
+    vec = P(axes if len(axes) > 1 else axes[0])
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(row, vec, vec, vec, vec, vec, vec, vec, vec),
+                  out_specs=(vec, P(), P(), P(), P()), check_rep=False)
+    return jax.jit(f)
+
+
+# --------------------------------------------------------------------------
 # host-level drivers
 # --------------------------------------------------------------------------
 

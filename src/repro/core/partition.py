@@ -47,11 +47,16 @@ class HaloPlan:
     max_g: int
 
 
-def block_partition(g: CSRGraph, n_shards: int, seed: int = 0) -> Partition:
+def block_partition(g: CSRGraph, n_shards: int, seed: int = 0,
+                    rng: np.random.Generator | None = None) -> Partition:
+    """``rng`` lets a caller share one numpy stream across the partition
+    shuffle and its own later draws (the sharded encoder threads the same
+    generator through here and the priority draw, so a 1-shard partition
+    replays ``core.coloring.prepare``'s stream exactly)."""
     n = g.n_vertices
     n_loc = -(-n // n_shards)
     n_pad = n_loc * n_shards
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed) if rng is None else rng
     # shuffle within each shard's contiguous block only
     perm = np.arange(n, dtype=np.int64)
     for d in range(n_shards):
@@ -131,9 +136,150 @@ def build_halo(part: Partition, ell_width: int | None = None) -> HaloPlan:
                     ell_local=ell_local, max_b=max_b, max_g=max_g)
 
 
+@dataclasses.dataclass(frozen=True)
+class MutableHaloPlan:
+    """Halo metadata over the *mutable* per-shard ELL+overflow layout
+    (DESIGN.md §15): unlike ``HaloPlan`` the row tables carry slack (extra
+    FILL columns per row, spare boundary/ghost capacity) so edge inserts
+    land in place instead of forcing an immediate re-plan, and hub rows
+    spill to a per-shard overflow COO exactly like the single-device
+    mutable encode."""
+
+    ell_local: np.ndarray     # (D, n_loc, W+slack) slot-space ELL, FILL pad
+    ovf_src: np.ndarray       # (D, ovf_cap) per-shard overflow COO rows
+    ovf_dst: np.ndarray       # (D, ovf_cap) slot-space overflow targets
+    boundary: np.ndarray      # (D, max_b_cap) local slots to publish, FILL
+    n_boundary: np.ndarray    # (D,) live boundary slots
+    ghost_ids: np.ndarray     # (D, max_g_cap) global (relabeled) ghost ids
+    ghost_flat: np.ndarray    # (D, max_g_cap) owner*max_b_cap + slot, FILL
+    n_ghost: np.ndarray       # (D,) live ghost slots
+    n_loc: int                # row-table height (>= partition block size)
+    max_b_cap: int
+    max_g_cap: int
+    ell_width: int            # W before slack columns
+
+
+def _slack_cap(k: int, lo: int = 8) -> int:
+    """Capacity with ~25% (min 8 slots) headroom so the first few inserts
+    never trigger a re-plan."""
+    return max(lo, k + max(8, k // 4))
+
+
+def build_halo_mutable(part: Partition, *, n_loc: int | None = None,
+                       ell_cap: int = 512, ell_slack: int = 4,
+                       ovf_cap: int | None = None, delta_cap: int = 2048,
+                       min_b_cap: int = 0,
+                       min_g_cap: int = 0) -> MutableHaloPlan:
+    """Mutable-ELL halo plan: per-shard slot-space neighbor tables with
+    slack, overflow spill for hub rows, and capacity-slacked boundary/ghost
+    arrays.  ``n_loc`` overrides the row-table height (the sharded engine
+    passes the chunk-aligned height so each shard's sweep divides evenly);
+    shard *membership* always follows ``part.n_loc`` blocks.  On a 1-shard
+    partition the ELL/overflow arrays are bit-identical to
+    ``core.coloring.prepare``'s mutable encode of the same graph."""
+    g, D, blk, n = part.graph, part.n_shards, part.n_loc, part.n
+    n_loc = blk if n_loc is None else int(n_loc)
+    if n_loc < blk:
+        raise ValueError(f"n_loc={n_loc} below partition block size {blk}")
+    shard_of = lambda v: np.minimum(v // blk, D - 1)
+    W = max(1, min(g.max_degree, ell_cap))
+
+    # ghost/boundary membership from ALL cross edges (ELL or overflow alike:
+    # an overflow edge's remote endpoint still needs a ghost color slot)
+    boundary_sets = [set() for _ in range(D)]
+    ghost_sets = [set() for _ in range(D)]
+    e = to_edge_list(g).astype(np.int64)
+    if len(e):
+        s_src, s_dst = shard_of(e[:, 0]), shard_of(e[:, 1])
+        cross = s_src != s_dst
+        for v, du, dv in zip(e[cross, 1], s_src[cross], s_dst[cross]):
+            ghost_sets[du].add(int(v))     # u references remote v
+            boundary_sets[dv].add(int(v))  # v must be published by its owner
+    boundary_lists = [np.sort(np.fromiter(b, np.int64, len(b)))
+                      for b in boundary_sets]
+    ghost_lists = [np.sort(np.fromiter(s, np.int64, len(s)))
+                   for s in ghost_sets]
+    max_b_cap = max(_slack_cap(max(len(b) for b in boundary_lists)),
+                    int(min_b_cap))
+    max_g_cap = max(_slack_cap(max(len(s) for s in ghost_lists)),
+                    int(min_g_cap))
+
+    boundary = np.full((D, max_b_cap), FILL, np.int32)
+    n_boundary = np.zeros((D,), np.int32)
+    slot_of = {}
+    for d in range(D):
+        b = boundary_lists[d]
+        boundary[d, :len(b)] = (b - d * blk).astype(np.int32)
+        n_boundary[d] = len(b)
+        for i, v in enumerate(b):
+            slot_of[int(v)] = i
+    ghost_ids = np.full((D, max_g_cap), FILL, np.int64)
+    ghost_flat = np.full((D, max_g_cap), FILL, np.int32)
+    n_ghost = np.zeros((D,), np.int32)
+    for d in range(D):
+        gl = ghost_lists[d]
+        ghost_ids[d, :len(gl)] = gl
+        n_ghost[d] = len(gl)
+        for i, v in enumerate(gl):
+            ghost_flat[d, i] = shard_of(v) * max_b_cap + slot_of[int(v)]
+
+    # slot-space ELL + per-shard overflow spill, in CSR order (bit-identical
+    # to prepare()'s hub spill on a 1-shard partition)
+    deg = g.degrees
+    row = np.repeat(np.arange(n), deg)
+    col = np.arange(g.n_edges) - np.repeat(g.indptr[:-1], deg)
+    dst = g.indices.astype(np.int64)
+    dshard = shard_of(row)
+    nshard = shard_of(dst)
+    local_rows = row - dshard * blk
+    slot = np.empty(len(dst), np.int64)
+    same = dshard == nshard
+    slot[same] = dst[same] - nshard[same] * blk
+    for d in range(D):
+        m = (~same) & (dshard == d)
+        if m.any():
+            slot[m] = n_loc + np.searchsorted(ghost_lists[d], dst[m])
+    in_ell = col < W
+    ell_local = np.full((D, n_loc, W + ell_slack), FILL, np.int32)
+    ell_local[dshard[in_ell], local_rows[in_ell], col[in_ell]] = \
+        slot[in_ell].astype(np.int32)
+    spill = ~in_ell
+    n_ovf_max = max((int(np.sum(spill & (dshard == d))) for d in range(D)),
+                    default=0)
+    cap = (int(ovf_cap) if ovf_cap is not None
+           else max(64, 2 * n_ovf_max, delta_cap // 2))
+    cap = max(cap, n_ovf_max, 8)
+    ovf_src = np.full((D, cap), FILL, np.int32)
+    ovf_dst = np.full((D, cap), FILL, np.int32)
+    for d in range(D):
+        m = spill & (dshard == d)
+        k = int(m.sum())
+        if k:
+            ovf_src[d, :k] = local_rows[m].astype(np.int32)
+            ovf_dst[d, :k] = slot[m].astype(np.int32)
+    return MutableHaloPlan(
+        ell_local=ell_local, ovf_src=ovf_src, ovf_dst=ovf_dst,
+        boundary=boundary, n_boundary=n_boundary, ghost_ids=ghost_ids,
+        ghost_flat=ghost_flat, n_ghost=n_ghost, n_loc=n_loc,
+        max_b_cap=max_b_cap, max_g_cap=max_g_cap, ell_width=W)
+
+
 def partition_stats(part: Partition) -> dict:
     e = to_edge_list(part.graph).astype(np.int64)
     s = np.minimum(e // part.n_loc, part.n_shards - 1)
-    cross = (s[:, 0] != s[:, 1]).mean() if len(e) else 0.0
+    cross_m = (s[:, 0] != s[:, 1]) if len(e) else np.zeros(0, bool)
+    cross = cross_m.mean() if len(e) else 0.0
+    # boundary vertices: endpoints some *other* shard references (the edge
+    # list carries both directions, so dst-side endpoints cover the set)
+    bverts = np.unique(e[cross_m, 1]) if len(e) else np.zeros(0, np.int64)
+    if len(bverts):
+        owners = np.minimum(bverts // part.n_loc, part.n_shards - 1)
+        max_b = int(np.bincount(owners, minlength=part.n_shards).max())
+    else:
+        max_b = 0
+    # one halo exchange gathers (max_b colors + 1 count) int32 per shard
+    # (the static build_rsoc_halo payload); O(boundary), not O(n)
     return {"cross_edge_frac": float(cross), "n_shards": part.n_shards,
-            "n_loc": part.n_loc}
+            "n_loc": part.n_loc,
+            "boundary_frac": float(len(bverts) / max(1, part.n)),
+            "halo_bytes_per_round": int(part.n_shards * (max_b + 1) * 4)}

@@ -14,6 +14,9 @@ delta, not the graph.
   service.py      ColoringService: long-lived multi-graph engine with a
                   double-buffered submit/step queue, megabatched stepping,
                   and a byte-budgeted version-memoized artifact cache
+  sharded.py      ShardedColoringState + recolor_sharded: the mutable
+                  encoding laid out per-shard over a device mesh, repaired
+                  with one boundary-sized collective per round
 """
 from repro.dynamic.incremental import (  # noqa: F401
     DynamicColoringState, dynamic_state, recolor_incremental,
@@ -21,3 +24,6 @@ from repro.dynamic.incremental import (  # noqa: F401
 from repro.dynamic.delta import state_to_csr  # noqa: F401
 from repro.dynamic.megabatch import slot_key, step_group  # noqa: F401
 from repro.dynamic.service import ArtifactCache, ColoringService  # noqa: F401
+from repro.dynamic.sharded import (  # noqa: F401
+    ShardedColoringState, recolor_sharded, sharded_state,
+)

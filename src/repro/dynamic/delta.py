@@ -331,7 +331,7 @@ def _rank_waves_group(pairs: np.ndarray, slots: np.ndarray, n_slots: int,
     return out
 
 
-def plan_group(batches, delta_cap: int, n_pad: int):
+def plan_group(batches, delta_cap: int, n_pad: int, directed: bool = False):
     """Vectorized ``plan_updates`` over a whole slot class for ONE batch
     round.  ``batches[b]`` is slot b's relabeled ``(ins, dels)`` pair of
     (k, 2) int32 arrays (empty arrays for a no-op slot).  Returns numpy
@@ -340,6 +340,14 @@ def plan_group(batches, delta_cap: int, n_pad: int):
     seed mask — where every slot's slices are bit-identical to its own
     ``plan_updates`` waves.  Collapsing the per-slot sorts into fused-key
     passes is a several-fold planning speedup at megabatch tenant counts.
+
+    ``directed=True`` (the sharded engine, slot = shard) takes each pair as
+    an already-directed (row, target-slot) mutation and skips the reversal:
+    a cross-shard edge's two directions live in *different* slots' batches,
+    so reversing here would fabricate row mutations for vertices the shard
+    does not own.  Self-pairs are still dropped from insert waves but still
+    seed ``touched`` — identical to the undirected path's treatment of
+    self-loop inserts.
     """
     n_slots = len(batches)
     touched = np.zeros((n_slots, n_pad), bool)
@@ -362,7 +370,7 @@ def plan_group(batches, delta_cap: int, n_pad: int):
             e = ins if kind == "ins" else dels
             if not len(e):
                 continue
-            d = np.concatenate([e, e[:, ::-1]])
+            d = np.asarray(e) if directed else np.concatenate([e, e[:, ::-1]])
             if kind == "ins":
                 d = d[d[:, 0] != d[:, 1]]          # drop self-loops
             ps.append(d)
@@ -471,6 +479,12 @@ def overflow_load(osrc) -> int:
 
 
 def state_to_csr(state) -> CSRGraph:
-    """Decode a DynamicColoringState back to a host CSRGraph (original ids)."""
+    """Decode a dynamic coloring state back to a host CSRGraph (original
+    ids).  Sharded states carry their own slot-space decoder (``to_csr``,
+    dynamic/sharded.py) — duck-typed here so every state consumer (service
+    verification, the degradation ladder's ``updated_graph``) stays
+    engine-agnostic."""
+    if hasattr(state, "to_csr"):
+        return state.to_csr()
     edges = ell_to_edges(state.ell, state.n, state.ovf_src, state.ovf_dst)
     return from_edges(state.n, state.inv_perm[edges], symmetrize=False)

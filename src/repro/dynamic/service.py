@@ -52,6 +52,7 @@ from repro.dynamic import delta
 from repro.dynamic import megabatch
 from repro.dynamic.incremental import (DynamicColoringState, _check_edges,
                                        recolor_incremental)  # noqa: F401
+from repro.dynamic.sharded import ShardedColoringState
 from repro.graphs.csr import CSRGraph, FILL, to_edge_list
 from repro.obs import metrics as obs_metrics
 from repro.resilience import faults, ladder
@@ -82,10 +83,34 @@ def _classify(exc: BaseException) -> str:
     return "error"
 
 
+def _corrupt_colors_sharded(st: ShardedColoringState) -> ShardedColoringState:
+    """Sharded ``color.corrupt``: same deterministic conflict injection,
+    restricted to shard 0 rows with a *local* neighbor so the copied color
+    is a guaranteed same-shard conflict regardless of ghost freshness."""
+    ell0 = np.asarray(st.ell[0])
+    n0 = min(st.blk, st.n)
+    local = (ell0 != FILL) & (ell0 < st.n_loc)
+    live_rows = np.nonzero(local[:n0].any(axis=1))[0]
+    if len(live_rows) == 0:
+        return st
+    r = faults.rng("color.corrupt")
+    k = min(max(1, int(faults.param("color.corrupt", "k", 1))),
+            len(live_rows))
+    colors = np.asarray(st.colors_tab[0])
+    ct = st.colors_tab
+    for v in r.choice(live_rows, size=k, replace=False):
+        row = ell0[int(v)]
+        w = int(row[local[int(v)]][0])
+        ct = ct.at[0, int(v)].set(int(colors[w]))
+    return dataclasses.replace(st, colors_tab=ct)
+
+
 def _corrupt_colors(st: DynamicColoringState) -> DynamicColoringState:
     """``color.corrupt`` payload: copy a live ELL neighbor's color onto
     ``k`` vertices (guaranteed conflicts), drawn from the site's
     deterministic RNG so replays corrupt identically."""
+    if isinstance(st, ShardedColoringState):
+        return _corrupt_colors_sharded(st)
     ell = np.asarray(st.ell[:st.n])
     live_rows = np.nonzero((ell != FILL).any(axis=1))[0]
     if len(live_rows) == 0:
@@ -231,7 +256,8 @@ class ColoringService:
 
     # -- graph lifecycle ----------------------------------------------------
 
-    def add_graph(self, name: str, g: CSRGraph, spec=None, **opts) -> int:
+    def add_graph(self, name: str, g: CSRGraph, spec=None, *,
+                  mesh=None, axis: Optional[str] = None, **opts) -> int:
         """Encode + color ``g`` from scratch; returns the initial version.
 
         Routes through the ``repro.api.color`` front door with
@@ -239,6 +265,11 @@ class ColoringService:
         ``DynamicColoringState``.  Precedence, most specific wins: per-call
         ``opts`` > explicit ``spec`` > service construction defaults (the
         defaults never override a spec the caller passed explicitly).
+
+        Passing ``mesh=`` shards the tenant over that device mesh (a
+        ``ShardedColoringState``, DESIGN.md §15): with no explicit spec the
+        backend defaults to ``'distributed'``, and subsequent steps route
+        the tenant's batches through ``recolor_sharded``.
         """
         if name in self._states:
             raise ValueError(f"graph {name!r} already registered")
@@ -250,7 +281,10 @@ class ColoringService:
             raise ValueError(
                 f"ColoringService graphs are incremental by construction "
                 f"(got mode={mode!r})")
-        res = api.color(g, spec, mode=mode, **overrides)
+        if mesh is not None and spec is None:
+            overrides.setdefault("backend", "distributed")
+        res = api.color(g, spec, mode=mode, mesh=mesh, axis=axis,
+                        **overrides)
         self._states[name] = res.state
         self._pending[name] = []
         return self._states[name].version
@@ -299,8 +333,10 @@ class ColoringService:
         count resets.
         """
         cur = self._state(name)
-        if not isinstance(state, DynamicColoringState):
-            raise TypeError("restore expects a DynamicColoringState")
+        if not isinstance(state, (DynamicColoringState,
+                                  ShardedColoringState)):
+            raise TypeError("restore expects a DynamicColoringState or "
+                            "ShardedColoringState")
         if state.n != cur.n:
             raise ValueError(
                 f"snapshot is for a {state.n}-vertex graph; "
@@ -373,8 +409,12 @@ class ColoringService:
         busy = [nm for nm in live if drained[nm]]
         groups: dict[tuple, list[str]] = {}
         for nm in busy:
-            groups.setdefault(megabatch.slot_key(self._states[nm]),
-                              []).append(nm)
+            st = self._states[nm]
+            # sharded tenants never megabatch (their dispatch is already
+            # mesh-wide); a singleton key routes them to the per-tenant path
+            key = (("sharded", nm) if isinstance(st, ShardedColoringState)
+                   else megabatch.slot_key(st))
+            groups.setdefault(key, []).append(nm)
 
         for key, members in groups.items():
             if self._megabatch and len(members) >= self._megabatch_min:
@@ -463,6 +503,10 @@ class ColoringService:
             self._rollback(nm, batches, exc, notes)
             return
         self._commit(nm, st)
+        hb = (getattr(st, "total_halo_bytes", 0)
+              - getattr(before, "total_halo_bytes", 0))
+        if hb > 0:
+            obs_metrics.counter("service.halo_bytes", tenant=nm).inc(hb)
         obs_metrics.histogram("service.step_ms", graph=nm).observe(
             (time.perf_counter() - t0) * 1e3)
         obs_metrics.counter("service.mega", outcome="loop").inc(len(batches))

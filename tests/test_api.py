@@ -111,7 +111,10 @@ def test_matrix_is_exhaustive():
     """Every registered combo is exercised by the differential suite above —
     a new engine registration must add a matrix row here."""
     covered = set(MATRIX) | {"rsoc/1/static/distributed",
-                             "cat/1/static/distributed"}
+                             "cat/1/static/distributed",
+                             # exercised by tests/test_sharded.py (needs a
+                             # multi-device subprocess, so not a MATRIX row)
+                             "rsoc/1/incremental/distributed"}
     registered = {f"{a}/{d}/{m}/{b}"
                   for (a, d, m, b) in registry.engine_keys()}
     assert registered == covered, registered ^ covered
@@ -214,6 +217,10 @@ def test_algorithms_view_is_registry_backed_and_warning_free():
     # partial coloring is a distance-2 task
     (dict(algorithm="rsoc", mode="partial", distance=1, n_left=4),
      "algorithm='rsoc', distance=2, mode='partial', backend='local'"),
+    # sharded incremental exists — under rsoc
+    (dict(algorithm="cat", mode="incremental", backend="distributed"),
+     "algorithm='rsoc', distance=1, mode='incremental', "
+     "backend='distributed'"),
 ])
 def test_unsupported_combo_names_nearest(overrides, nearest):
     with pytest.raises(ValueError, match="nearest supported spec") as ei:

@@ -59,7 +59,10 @@ def _no_env_trace(monkeypatch):
 
 def test_trace_cases_are_exhaustive():
     covered = set(CASES) | {"rsoc/1/static/distributed",
-                            "cat/1/static/distributed"}
+                            "cat/1/static/distributed",
+                            # multi-device subprocess combo, exercised by
+                            # tests/test_sharded.py
+                            "rsoc/1/incremental/distributed"}
     registered = {f"{a}/{d}/{m}/{b}"
                   for (a, d, m, b) in registry.engine_keys()}
     assert registered == covered, registered ^ covered

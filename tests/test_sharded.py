@@ -1,0 +1,208 @@
+"""Sharded incremental recoloring (DESIGN.md §15): differential 1-shard
+bit-identity, multi-shard properness, re-plans, the ColoringService path,
+and the degradation ladder — all on forced host CPU devices.
+
+Same trick as test_distributed.py: conftest pins the main pytest process to
+one device, so the mesh cases run in a dedicated subprocess that sets
+XLA_FLAGS before importing jax and reports one JSON blob on stdout.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import json
+import numpy as np
+import jax
+from repro import api
+from repro.core import coloring as col
+from repro.dynamic import (ColoringService, ShardedColoringState, delta,
+                           recolor_sharded)
+from repro.dynamic.incremental import recolor_incremental
+from repro.graphs import generators as gen
+from repro.obs import metrics as obs_metrics
+from repro.resilience import ladder
+
+out = {}
+g = gen.mesh2d(24, 24)
+n = g.n_vertices
+
+def stream(seed, k):
+    rng = np.random.default_rng(seed)
+    for _ in range(k):
+        ins = rng.integers(0, n, size=(40, 2)).astype(np.int64)
+        dels = rng.integers(0, n, size=(15, 2)).astype(np.int64)
+        yield ins[ins[:, 0] != ins[:, 1]], dels
+
+# -- 1-shard differential: the sharded stack replays mode="incremental"
+# bit-for-bit (same seed, same update stream) --------------------------------
+mesh1 = jax.make_mesh((1,), ("data",))
+r_ref = api.color(g, mode="incremental", seed=0)
+r_sh = api.color(g, mode="incremental", backend="distributed", mesh=mesh1,
+                 seed=0)
+ident = bool(np.array_equal(r_ref.colors, r_sh.colors))
+st_ref, st_sh = r_ref.state, r_sh.state
+for ins, dels in stream(7, 5):
+    st_ref = recolor_incremental(st_ref, ins, dels)
+    st_sh = recolor_sharded(st_sh, ins, dels)
+    ident = ident and bool(np.array_equal(st_ref.colors, st_sh.colors))
+    ident = ident and (st_ref.C, st_ref.last_rounds, st_ref.last_conflicts,
+                       st_ref.last_gather_passes) == \
+        (st_sh.C, st_sh.last_rounds, st_sh.last_conflicts,
+         st_sh.last_gather_passes)
+out["one_shard"] = {"identical": ident,
+                    "halo_bytes": int(st_sh.last_halo_bytes)}
+
+# -- multi-shard: proper within the static color envelope, replans heal -----
+for D in (4, 8):
+    mesh = jax.make_mesh((D,), ("data",))
+    st = api.color(g, mode="incremental", backend="distributed", mesh=mesh,
+                   seed=0).state
+    proper = bool(col.is_proper(g, st.colors))
+    for ins, dels in stream(11, 4):
+        st = recolor_sharded(st, ins, dels)
+        proper = proper and bool(col.is_proper(delta.state_to_csr(st),
+                                               st.colors))
+    rng = np.random.default_rng(13)
+    big = rng.integers(0, n, size=(3000, 2)).astype(np.int64)
+    st = recolor_sharded(st, big[big[:, 0] != big[:, 1]], None)
+    proper = proper and bool(col.is_proper(delta.state_to_csr(st),
+                                           st.colors))
+    out[f"shards{D}"] = {
+        "proper": proper, "colors": int(st.n_colors),
+        "bound": int(delta.state_to_csr(st).max_degree + 1),
+        "replans": int(st.replans),
+        "halo_bytes_per_round": int(st.halo_bytes_per_round),
+        "n_shards_in_summary": int(st.summary()["n_shards"]),
+    }
+
+# -- service: sharded tenant next to a local one; halo-bytes counter,
+# snapshot/restore, artifact queries ----------------------------------------
+mesh8 = jax.make_mesh((8,), ("data",))
+svc = ColoringService(megabatch=True)
+svc.add_graph("sh", g, mesh=mesh8, seed=0)
+svc.add_graph("loc", g, seed=0)
+rng = np.random.default_rng(3)
+for _ in range(2):
+    ins = rng.integers(0, n, size=(25, 2)).astype(np.int64)
+    ins = ins[ins[:, 0] != ins[:, 1]]
+    svc.submit("sh", inserts=ins)
+    svc.submit("loc", inserts=ins)
+    svc.step()
+sh_proper = bool(col.is_proper(svc.graph("sh"), svc.colors("sh")))
+loc_proper = bool(col.is_proper(svc.graph("loc"), svc.colors("loc")))
+hb = int(obs_metrics.counter("service.halo_bytes", tenant="sh").value)
+hb_loc = int(obs_metrics.counter("service.halo_bytes", tenant="loc").value)
+snap = svc.snapshot("sh")
+svc.submit("sh", inserts=np.array([[0, 5]], np.int64))
+svc.step("sh")
+v_after = svc.restore("sh", snap)
+sched = svc.vertex_schedule("sh")
+out["service"] = {
+    "sh_proper": sh_proper, "loc_proper": loc_proper,
+    "sharded_is_sharded": isinstance(svc.snapshot("sh"),
+                                     ShardedColoringState),
+    "halo_bytes": hb, "halo_bytes_local": hb_loc,
+    "restore_version": int(v_after),
+    "schedule_covers": int(sum(len(c) for c in sched)) == n,
+}
+
+# -- ladder: budget exhaustion degrades with rung attribution ---------------
+st = api.color(g, mode="incremental", backend="distributed", mesh=mesh8,
+               seed=0).state
+st_poor = dataclasses.replace(st, C=1, max_cap_retries=0)
+# insert edges between same-colored vertices: guaranteed conflicts, and
+# repairing them under C=1 must overflow the cap immediately
+c0 = st.colors
+ins = np.array([(u, v) for u in range(40) for v in range(u + 1, 60)
+                if c0[u] == c0[v]][:16], np.int64)
+st2, rung = ladder.apply_with_ladder(st_poor, ins, np.zeros((0, 2),
+                                                            np.int64))
+st3 = ladder.oracle_state(st_poor, ins, np.zeros((0, 2), np.int64))
+out["ladder"] = {
+    "rung": int(rung),
+    "still_sharded": isinstance(st2, ShardedColoringState),
+    "proper": bool(col.is_proper(delta.state_to_csr(st2), st2.colors)),
+    "attributed": int(st2.last_degrade_rung) == int(rung),
+    "oracle_rung": int(st3.last_degrade_rung),
+    "oracle_proper": bool(col.is_proper(delta.state_to_csr(st3),
+                                        st3.colors)),
+}
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def sharded_results():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=500)
+    assert p.returncode == 0, p.stderr[-2000:]
+    return json.loads(p.stdout.strip().splitlines()[-1])
+
+
+def test_one_shard_bit_identity(sharded_results):
+    """The ISSUE's differential bar: a 1-shard mesh replays the
+    single-device incremental engine bit-for-bit across a 5-batch update
+    stream — colors AND (C, rounds, conflicts, gather passes)."""
+    r = sharded_results["one_shard"]
+    assert r["identical"]
+    assert r["halo_bytes"] > 0
+
+
+def test_multi_shard_proper_within_envelope(sharded_results):
+    for D in (4, 8):
+        r = sharded_results[f"shards{D}"]
+        assert r["proper"], r
+        assert r["colors"] <= r["bound"], r
+        assert r["n_shards_in_summary"] == D
+
+
+def test_replan_heals_capacity(sharded_results):
+    """The 3000-edge batch must overflow the initial halo slack and force
+    at least one re-plan — and the coloring stays proper through it."""
+    assert sharded_results["shards8"]["replans"] >= 1
+
+
+def test_halo_bytes_boundary_not_n(sharded_results):
+    """Bytes/round ∝ boundary: the 8-shard payload must stay well under an
+    O(n) all-gather of the 576-vertex mesh's colors."""
+    r = sharded_results["shards8"]
+    assert 0 < r["halo_bytes_per_round"] < 8 * 4 * 576
+
+
+def test_service_sharded_tenant(sharded_results):
+    r = sharded_results["service"]
+    assert r["sh_proper"] and r["loc_proper"]
+    assert r["sharded_is_sharded"]
+    assert r["halo_bytes"] > 0          # counted for the sharded tenant
+    assert r["halo_bytes_local"] == 0   # never for the local one
+    assert r["schedule_covers"]
+    assert r["restore_version"] > 0
+
+
+def test_ladder_on_sharded_state(sharded_results):
+    r = sharded_results["ladder"]
+    assert r["rung"] >= 1 and r["attributed"]
+    assert r["still_sharded"] and r["proper"]
+    assert r["oracle_rung"] == 2 and r["oracle_proper"]
+
+
+def test_mesh_required():
+    """The engine names the fix when called without a mesh (parent process:
+    no multi-device requirement)."""
+    from repro import api
+    from repro.graphs import generators as gen
+    with pytest.raises(ValueError, match="requires a device mesh"):
+        api.color(gen.mesh2d(4, 4), mode="incremental",
+                  backend="distributed")
